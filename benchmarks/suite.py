@@ -1,0 +1,42 @@
+"""Benchmark matrix suite: scaled-down structural analogues of the paper's
+83 multiplications (UF-collection A*A + multigrid R*A*P triple products).
+
+Sizes are chosen for the 1-core CPU container; the structure classes match
+Table 3: power-law (RMAT/wikipedia-like), bounded-degree FEM (banded/
+stencil), multigrid triple products, and uniform random.
+"""
+from __future__ import annotations
+
+from repro.sparse import (
+    banded_csr,
+    galerkin_triple,
+    random_csr,
+    rmat_csr,
+    stencil2d_csr,
+)
+
+
+def suite():
+    """Yield (name, A, B) multiplication cases."""
+    cases = []
+    # A*A on power-law graphs (graph-analytics side of Table 3)
+    for scale, ef in ((9, 6), (10, 8)):
+        g = rmat_csr(scale, ef, seed=scale)
+        cases.append((f"rmat{scale}_AxA", g, g))
+    # A*A on FEM-like bounded-degree matrices
+    b = banded_csr(20_000, 6, seed=3)
+    cases.append(("banded20k_AxA", b, b))
+    s = stencil2d_csr(96, 96)
+    cases.append(("stencil96_AxA", s, s))
+    # uniform random rectangular
+    cases.append(
+        ("rand8k_AxB", random_csr(8_192, 8_192, 8.0, 11),
+         random_csr(8_192, 8_192, 8.0, 12))
+    )
+    # multigrid triple products (24/83 of the paper's cases)
+    r, a, p = galerkin_triple(64, 64, 4)
+    cases.append(("mg64_AxP", a, p))
+    cases.append(("mg64_RxA", r, a))
+    r2, a2, p2 = galerkin_triple(96, 96, 8)
+    cases.append(("mg96_AxP", a2, p2))
+    return cases

@@ -1,0 +1,44 @@
+"""Batched serving example: prefill a prompt batch, then greedy decode with
+static-shape KV caches (ring buffers on local-attention layers).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-9b --steps 24
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)  # CPU-scale weights
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(params, cfg,
+                         max_len=args.prompt_len + args.steps)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    out = engine.generate(prompts, steps=args.steps)
+    print(f"arch={cfg.name}  batch={args.batch}  "
+          f"prompt={args.prompt_len}  generated={out.shape[1]} tokens")
+    for row in np.asarray(out)[:2]:
+        print("  tokens:", row[:16].tolist(), "...")
+    assert out.shape == (args.batch, args.steps)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""The paper's primary contribution: performance-portable two-phase SpGEMM.
+
+Public API:
+    spgemm            — full meta-algorithm driver (KKSPGEMM)
+    symbolic          — phase 1 (row sizes; compression-aware)
+    numeric_fresh     — phase 2, first run (structure + values + reuse plan)
+    numeric_reuse     — phase 2, Reuse case (new values, same structure)
+    compress_matrix   — §3.2 bit compression
+    distributed_spgemm — 1-D row-wise SpGEMM over a device mesh
+"""
+from repro.core.spgemm import (
+    SpgemmPlan,
+    SpgemmResult,
+    expand_products,
+    host_fm_cap,
+    numeric_dense_acc,
+    numeric_fresh,
+    numeric_reuse,
+    spgemm,
+    symbolic,
+    symbolic_compressed,
+    symbolic_dense_bitmask,
+    symbolic_plain,
+)
+from repro.core.compression import (
+    COMPRESSION_CF_CUTOFF,
+    CompressedMatrix,
+    bitmask_rows,
+    compress_matrix,
+    compression_decision,
+    flops_stats,
+)
+from repro.core.meta import (
+    AVG_ROW_FLOPS_CUTOFF,
+    DENSE_K_CUTOFF,
+    choose_kernel,
+    choose_method,
+    estimate_ars,
+)
+from repro.core.distributed import (
+    ShardedCSR,
+    concat_csr_shards,
+    dist_numeric,
+    dist_symbolic,
+    distributed_spgemm,
+    merge_shards,
+    partition_rows,
+)
+from repro.core.memory_pool import PoolConfig, acquire_release_sim, chunk_for_step, size_pool
+
+__all__ = [
+    "SpgemmPlan",
+    "SpgemmResult",
+    "expand_products",
+    "host_fm_cap",
+    "numeric_dense_acc",
+    "numeric_fresh",
+    "numeric_reuse",
+    "spgemm",
+    "symbolic",
+    "symbolic_compressed",
+    "symbolic_dense_bitmask",
+    "symbolic_plain",
+    "COMPRESSION_CF_CUTOFF",
+    "CompressedMatrix",
+    "bitmask_rows",
+    "compress_matrix",
+    "compression_decision",
+    "flops_stats",
+    "AVG_ROW_FLOPS_CUTOFF",
+    "DENSE_K_CUTOFF",
+    "choose_kernel",
+    "choose_method",
+    "estimate_ars",
+    "ShardedCSR",
+    "concat_csr_shards",
+    "dist_numeric",
+    "dist_symbolic",
+    "distributed_spgemm",
+    "merge_shards",
+    "partition_rows",
+    "PoolConfig",
+    "acquire_release_sim",
+    "chunk_for_step",
+    "size_pool",
+]

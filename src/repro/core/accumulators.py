@@ -1,0 +1,198 @@
+"""Faithful, jittable ports of the paper's accumulator data structures (§3.1.2).
+
+These are the semantic ground truth for the TPU kernels and the direct
+implementation used by the row-level tests:
+
+* ``LLHashmap``  — linked-list hashmap: 4 parallel arrays (Begins, Nexts, Ids,
+  Values), power-of-2 ``&`` hashing, insertion at list head. The GPU version
+  reserves slots with an atomic counter; here a grid step is the sole writer
+  of its accumulator (Thread-Sequential semantics) so the counter is plain.
+* ``LPHashmap``  — linear probing with the paper's 50% max-occupancy rule:
+  beyond the cutoff, *new* keys are rejected (spill to L2) while existing
+  keys still accumulate.
+* two-level L1/L2 composition with L2 sized to hold all spills (CHUNKSIZE =
+  MAXRF guarantee from the memory pool).
+
+All functions are pure and sequential over the insert stream — accumulation
+order is the only thing Gustavson's algorithm requires.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_OCCUPANCY = 0.5  # paper §3.1.2: LP slows down past 50% occupancy
+
+
+class LLState(NamedTuple):
+    begins: jax.Array  # (hash_size,) int32, -1 = empty list
+    nexts: jax.Array  # (capacity,) int32, -1 = end of list
+    ids: jax.Array  # (capacity,) int32
+    values: jax.Array  # (capacity,) float
+    used: jax.Array  # () int32
+
+
+def ll_init(hash_size: int, capacity: int, dtype=jnp.float32) -> LLState:
+    assert hash_size & (hash_size - 1) == 0, "hash size must be a power of 2"
+    return LLState(
+        begins=jnp.full((hash_size,), -1, jnp.int32),
+        nexts=jnp.full((capacity,), -1, jnp.int32),
+        ids=jnp.zeros((capacity,), jnp.int32),
+        values=jnp.zeros((capacity,), dtype),
+        used=jnp.zeros((), jnp.int32),
+    )
+
+
+def ll_insert(state: LLState, key: jax.Array, val: jax.Array):
+    """Insert-or-accumulate one (key, val). Returns (state, accepted: bool).
+
+    accepted=False == the paper's "FULL" return -> caller spills to L2.
+    """
+    mask = state.begins.shape[0] - 1
+    h = key & mask
+
+    def cond(carry):
+        idx, found = carry
+        return (idx != -1) & (found == -1)
+
+    def body(carry):
+        idx, _ = carry
+        found = jnp.where(state.ids[idx] == key, idx, -1)
+        nxt = jnp.where(found == -1, state.nexts[idx], idx)
+        return nxt, found
+
+    _, found = jax.lax.while_loop(cond, body, (state.begins[h], jnp.int32(-1)))
+
+    def do_accumulate(s: LLState) -> LLState:
+        return s._replace(values=s.values.at[found].add(val))
+
+    def do_insert(s: LLState) -> LLState:
+        slot = s.used
+        return LLState(
+            begins=s.begins.at[h].set(slot),
+            nexts=s.nexts.at[slot].set(s.begins[h]),
+            ids=s.ids.at[slot].set(key),
+            values=s.values.at[slot].set(val),
+            used=s.used + 1,
+        )
+
+    capacity = state.nexts.shape[0]
+    full = (found == -1) & (state.used >= capacity)
+    state = jax.lax.cond(
+        found != -1,
+        do_accumulate,
+        lambda s: jax.lax.cond(full, lambda x: x, do_insert, s),
+        state,
+    )
+    return state, ~full
+
+
+class LPState(NamedTuple):
+    ids: jax.Array  # (size,) int32, -1 = empty (paper Fig. 4c)
+    values: jax.Array  # (size,) float
+    used: jax.Array  # () int32
+
+
+def lp_init(size: int, dtype=jnp.float32) -> LPState:
+    assert size & (size - 1) == 0, "LP table size must be a power of 2"
+    return LPState(
+        ids=jnp.full((size,), -1, jnp.int32),
+        values=jnp.zeros((size,), dtype),
+        used=jnp.zeros((), jnp.int32),
+    )
+
+
+def lp_insert(state: LPState, key: jax.Array, val: jax.Array,
+              max_occupancy: float = MAX_OCCUPANCY):
+    """Linear-probing insert-or-accumulate with the max-occupancy cutoff."""
+    size = state.ids.shape[0]
+    mask = size - 1
+    cutoff = jnp.int32(int(size * max_occupancy))
+    h = key & mask
+
+    def cond(p):
+        return (state.ids[p] != -1) & (state.ids[p] != key)
+
+    def body(p):
+        return (p + 1) & mask
+
+    p = jax.lax.while_loop(cond, body, h)
+    exists = state.ids[p] == key
+    # New keys are rejected once occupancy exceeds the cutoff.
+    accept_new = state.used < cutoff
+    accepted = exists | accept_new
+
+    def upd(s: LPState) -> LPState:
+        return LPState(
+            ids=s.ids.at[p].set(key),
+            values=s.values.at[p].add(val),
+            used=s.used + jnp.where(exists, 0, 1),
+        )
+
+    state = jax.lax.cond(accepted, upd, lambda s: s, state)
+    return state, accepted
+
+
+class TwoLevelResult(NamedTuple):
+    l1: LPState | LLState
+    l2: LLState
+    l2_allocated: jax.Array  # () bool — whether any spill happened
+
+
+@partial(jax.jit, static_argnames=("l1_hash", "l1_cap", "l2_cap", "kind"))
+def accumulate_row(keys: jax.Array, vals: jax.Array, valid: jax.Array,
+                   l1_hash: int, l1_cap: int, l2_cap: int, kind: str = "ll"):
+    """Run a full insert stream through the two-level L1/L2 scheme (Alg. 3
+    lines 7-10). L2 is an LL map sized to hold every spill (MAXRF bound).
+
+    Returns (l1_state, l2_state, l2_allocated).
+    """
+    if kind == "ll":
+        l1 = ll_init(l1_hash, l1_cap, vals.dtype)
+        insert1 = ll_insert
+    elif kind == "lp":
+        l1 = lp_init(l1_cap, vals.dtype)
+        insert1 = lp_insert
+    else:
+        raise ValueError(kind)
+    l2_hash = max(1, l2_cap)
+    l2_hash = 1 << (l2_hash - 1).bit_length()  # next pow2
+    l2 = ll_init(l2_hash, l2_cap, vals.dtype)
+
+    def step(i, carry):
+        l1, l2, spilled = carry
+        k, v, ok = keys[i], vals[i], valid[i]
+
+        def live(args):
+            l1, l2, spilled = args
+            l1_new, accepted = insert1(l1, k, v)
+
+            def spill(args2):
+                _, l2 = args2
+                l2_new, _ = ll_insert(l2, k, v)
+                return l2_new
+
+            l2_new = jax.lax.cond(
+                accepted, lambda args2: args2[1], spill, (k, l2)
+            )
+            return l1_new, l2_new, spilled | ~accepted
+
+        return jax.lax.cond(ok, live, lambda a: a, (l1, l2, spilled))
+
+    l1, l2, spilled = jax.lax.fori_loop(
+        0, keys.shape[0], step, (l1, l2, jnp.zeros((), jnp.bool_))
+    )
+    return l1, l2, spilled
+
+
+def extract_sorted(ids: jax.Array, values: jax.Array, live: jax.Array):
+    """Sort an accumulator's live (id, value) pairs by id (test helper).
+
+    For LL maps pass ``live = arange(cap) < used``; for LP ``live = ids >= 0``.
+    """
+    key = jnp.where(live, ids, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key)
+    return key[order], values[order], live[order]

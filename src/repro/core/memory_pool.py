@@ -1,0 +1,101 @@
+"""Thread-scalable memory pool (paper §3.1.2), adapted to XLA's static world.
+
+The paper's pool services dynamic L2-accumulator allocations from thousands
+of threads: NUMCHUNKS chunks of CHUNKSIZE = MAXRF entries, with ONE2ONE
+(CPU/KNL: chunk i belongs to thread i, NUMA-local reuse) and MANY2MANY
+(GPU: scan from the thread index for a free chunk, spin on exhaustion).
+
+XLA cannot allocate inside a kernel, so the pool becomes a *statically
+pre-allocated* chunk table whose sizing logic is the paper's: CHUNKSIZE from
+the (compressed) MAXRF upper bound, NUMCHUNKS from the architecture's
+concurrency. Acquisition maps grid steps to chunks:
+
+* ONE2ONE   — chunk id == grid step id (our Pallas grids schedule one
+  row-block per step, so ownership is exclusive by construction);
+* MANY2MANY — chunk id == grid step id mod NUMCHUNKS, valid because Mosaic
+  executes TPU grid steps sequentially per core — a chunk is always released
+  (row finished) before the next step that maps to it begins. This is the
+  paper's "release as soon as the thread releases the chunk" invariant,
+  enforced by scheduling instead of locks.
+
+``acquire_release_sim`` keeps a faithful lock-bitmap simulation of the
+MANY2MANY scan for the data-structure tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    num_chunks: int
+    chunk_size: int  # entries per chunk == MAXRF bound
+    mode: str  # "one2one" | "many2many"
+
+    @property
+    def total_entries(self) -> int:
+        return self.num_chunks * self.chunk_size
+
+
+def size_pool(maxrf: int, concurrency: int, mode: str = "one2one",
+              bytes_budget: int | None = None, entry_bytes: int = 8) -> PoolConfig:
+    """Size the pool exactly as §3.1.2: CHUNKSIZE = MAXRF (guarantees any row
+    fits), NUMCHUNKS = concurrency; shrink NUMCHUNKS if the allocation would
+    blow the budget (the paper's GPU fallback)."""
+    chunk = max(int(maxrf), 1)
+    chunks = max(int(concurrency), 1)
+    if bytes_budget is not None:
+        max_chunks = max(bytes_budget // max(chunk * entry_bytes, 1), 1)
+        chunks = min(chunks, int(max_chunks))
+    return PoolConfig(num_chunks=chunks, chunk_size=chunk, mode=mode)
+
+
+def chunk_for_step(cfg: PoolConfig, step) :
+    """Chunk index owned by a grid step (see module docstring)."""
+    if cfg.mode == "one2one":
+        return step
+    return step % cfg.num_chunks
+
+
+@partial(jax.jit, static_argnames=("num_chunks",))
+def acquire_release_sim(thread_ids: jax.Array, release_after: jax.Array,
+                        num_chunks: int):
+    """Faithful MANY2MANY semantics check: process a timeline of acquire
+    events (thread_ids) with per-event hold durations; each acquire scans
+    from ``tid % num_chunks`` for the first free chunk. Returns the chunk
+    each event received. Sequential — test-scale only."""
+    n = thread_ids.shape[0]
+
+    def step(i, carry):
+        locks, got = carry  # locks[j] = timestep when chunk j frees
+        tid = thread_ids[i]
+
+        # release everything whose time has passed
+        locks = jnp.where(locks <= i, jnp.int32(-1), locks)
+
+        def scan_cond(s):
+            j, found = s
+            return (found == -1) & (j < num_chunks * 2)
+
+        def scan_body(s):
+            j, _ = s
+            idx = (tid + j) % num_chunks
+            free = locks[idx] == -1
+            return j + 1, jnp.where(free, idx, -1)
+
+        _, chunk = jax.lax.while_loop(
+            scan_cond, scan_body, (jnp.int32(0), jnp.int32(-1))
+        )
+        chunk = jnp.maximum(chunk, 0)  # spin-exhaustion clamps (test sizes small)
+        locks = locks.at[chunk].set(i + release_after[i])
+        got = got.at[i].set(chunk)
+        return locks, got
+
+    locks = jnp.full((num_chunks,), -1, jnp.int32)
+    got = jnp.zeros((n,), jnp.int32)
+    _, got = jax.lax.fori_loop(0, n, step, (locks, got))
+    return got

@@ -1,0 +1,44 @@
+"""KKSPGEMM meta-algorithm (paper §3.3, Table 1).
+
+The paper's selection constants are kept verbatim:
+  * CPUs/KNLs: KKDENSE when k < 250 000, KKMEM otherwise.
+  * GPUs:      KKMEM when average row flops < 256, KKLP otherwise.
+  * ARS estimate for symbolic sizing: f_m / 8 ("every 8th multiplication
+    reduces to the same nonzero").
+
+TPU mapping (DESIGN.md §2): "dense" = dense-accumulator paths (XLA scatter /
+Pallas dense-tile kernel), "sparse" = sorted-segment flat-parallel path,
+"hash" = Pallas LP-hash kernel. The k cutoff doubles as a memory guard for
+the O(m*k) dense accumulator.
+"""
+from __future__ import annotations
+
+from repro.sparse.formats import CSR
+
+DENSE_K_CUTOFF = 250_000  # paper §3.3
+AVG_ROW_FLOPS_CUTOFF = 256  # paper §3.3 (GPU variant selection)
+ARS_REDUCTION_GUESS = 8  # paper §3.3: every 8th multiply collides
+DENSE_BYTES_BUDGET = 1 << 30  # 1 GiB guard for the XLA dense accumulator
+
+
+def choose_method(a: CSR, b: CSR, stats: dict) -> str:
+    """Return 'dense' or 'sparse' for the XLA numeric phase."""
+    k = b.k
+    dense_bytes = a.m * k * 4 * 2  # values + occupancy
+    if k < DENSE_K_CUTOFF and dense_bytes <= DENSE_BYTES_BUDGET:
+        return "dense"
+    return "sparse"
+
+
+def choose_kernel(a: CSR, b: CSR, stats: dict) -> str:
+    """Return 'dense_acc' (KKMEM-position: thread-sequential, modest rows) or
+    'flat_lp' (KKLP-position: flat-parallel for flop-heavy rows) for the
+    Pallas path — the paper's GPU rule on average row flops."""
+    fm = max(stats.get("fm", 0), 1)
+    avg_row_flops = fm / max(a.m, 1)
+    return "dense_acc" if avg_row_flops < AVG_ROW_FLOPS_CUTOFF else "flat_lp"
+
+
+def estimate_ars(fm: int) -> int:
+    """Average output row size estimate used before symbolic (paper §3.3)."""
+    return max(fm // ARS_REDUCTION_GUESS, 1)

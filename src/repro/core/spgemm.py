@@ -1,0 +1,360 @@
+"""Two-phase SpGEMM (paper Alg. 2/3) adapted to XLA's static-shape regime.
+
+Phase contract (identical to the paper's host/device split):
+  1. ``symbolic``  — jitted; returns per-row nnz of C (no FLOPs). Uses the
+     compressed matrix when the CF <= 0.85 rule fires.
+  2. host         — materializes ``indptr`` and the concrete nnz(C).
+  3. ``numeric``  — jitted at that size; fills C. The first run also emits a
+     ``SpgemmPlan`` (structure + product->slot map). Re-running with new
+     values but the same structure (the paper's *Reuse* case) is a pure
+     gather/segment-sum — no hashing, no sort, no recompile.
+
+Accumulation strategy per the TPU adaptation (DESIGN.md §2): sorted-segment
+accumulation (Thread-Flat-Parallel semantics — associative, atomic-free) and
+dense scatter accumulation (KKDENSE). Hash accumulators live in
+``core/accumulators.py`` (jittable LL/LP ports) and ``kernels/`` (Pallas).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import (
+    CompressedMatrix,
+    compress_matrix,
+    compression_decision,
+    flops_stats,
+)
+from repro.core.utils import popcount, segmented_scan, segment_ends
+from repro.sparse.formats import CSR, csr_row_ids
+
+
+class ProductExpansion(NamedTuple):
+    """Flattened multiplication space: the paper's Thread-Flat-Parallel view.
+
+    Product t multiplies A-slot ``a_slot[t]`` with B-slot ``b_slot[t]`` and
+    lands in C row ``row[t]``, column ``col[t]``. ``valid`` masks padding.
+    """
+
+    row: jax.Array
+    col: jax.Array
+    a_slot: jax.Array
+    b_slot: jax.Array
+    valid: jax.Array
+
+
+class SpgemmPlan(NamedTuple):
+    """Cached numeric plan enabling the Reuse fast path."""
+
+    indptr: jax.Array  # (m+1,) int32 — C row pointers
+    indices: jax.Array  # (nnz_cap,) int32 — C columns, sorted per row
+    order: jax.Array  # (fm_cap,) int32 — product sort permutation
+    seg_ids: jax.Array  # (fm_cap,) int32 — sorted product -> C slot
+    a_slot: jax.Array  # (fm_cap,) int32
+    b_slot: jax.Array  # (fm_cap,) int32
+    valid: jax.Array  # (fm_cap,) bool
+    shape: tuple  # (m, k) of C
+
+
+@partial(jax.jit, static_argnames=("fm_cap",))
+def expand_products(a: CSR, b: CSR, fm_cap: int) -> ProductExpansion:
+    """Enumerate all f_m multiplications with static capacity ``fm_cap``.
+
+    For product t: binary-search the owning A-slot in the exclusive prefix of
+    per-A-slot product counts, then offset into B's row. Fully vectorized.
+    """
+    b_row_nnz = b.row_nnz()
+    a_valid = a.valid_mask()
+    per_slot = jnp.where(
+        a_valid, b_row_nnz[jnp.minimum(a.indices, b.m - 1)], 0
+    ).astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(per_slot).astype(jnp.int32)]
+    )  # (nnzA+1,)
+    t = jnp.arange(fm_cap, dtype=jnp.int32)
+    a_slot = (
+        jnp.searchsorted(offsets, t, side="right").astype(jnp.int32) - 1
+    ).clip(0, a.nnz_cap - 1)
+    within = t - offsets[a_slot]
+    valid = t < offsets[-1]
+    j = a.indices[a_slot]
+    b_slot = (b.indptr[jnp.minimum(j, b.m - 1)] + within).clip(0, b.nnz_cap - 1)
+    rows = csr_row_ids(a.indptr, a.nnz_cap)[a_slot]
+    col = b.indices[b_slot]
+    return ProductExpansion(
+        row=jnp.where(valid, rows, a.m),  # pad rows to m -> sorts to the end
+        col=jnp.where(valid, col, 0),
+        a_slot=a_slot,
+        b_slot=b_slot,
+        valid=valid,
+    )
+
+
+def host_fm_cap(a: CSR, b: CSR, pad_to: int = 8) -> int:
+    """Host-side f_m (total products) rounded up — the static expansion size."""
+    fm, _, _ = flops_stats(a, b.row_nnz())
+    fm = int(fm)
+    return max(-(-fm // pad_to) * pad_to, pad_to)
+
+
+# --------------------------------------------------------------------------
+# Symbolic phase
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("fm_cap", "m"))
+def _symbolic_sorted(rows, keys, payload, valid, m: int, fm_cap: int):
+    """Shared core: sort (row, key) pairs, OR payloads per group, count groups
+    per row (plain symbolic: payload == popcount 1 per distinct column)."""
+    order = jnp.lexsort((keys, rows))
+    rows_s, keys_s, valid_s = rows[order], keys[order], valid[order]
+    pay_s = payload[order]
+    heads = jnp.concatenate(
+        [
+            jnp.ones((1,), jnp.bool_),
+            (rows_s[1:] != rows_s[:-1]) | (keys_s[1:] != keys_s[:-1]),
+        ]
+    )
+    or_scan = segmented_scan(pay_s, heads, jnp.bitwise_or)
+    ends = segment_ends(heads) & valid_s
+    contrib = jnp.where(ends, popcount(or_scan), 0).astype(jnp.int32)
+    sizes = jnp.zeros((m,), jnp.int32).at[jnp.minimum(rows_s, m - 1)].add(
+        jnp.where(valid_s, contrib, 0), mode="drop"
+    )
+    return sizes
+
+
+@partial(jax.jit, static_argnames=("fm_cap", "m"))
+def symbolic_compressed(a: CSR, bc: CompressedMatrix, m: int, fm_cap: int) -> jax.Array:
+    """Symbolic phase on the compressed B (paper §3.2): expand (row, CSI, CS)
+    products, OR the CS masks per (row, CSI), sum popcounts per row."""
+    bc_row_nnz = bc.row_nnz()
+    a_valid = a.valid_mask()
+    nb = bc.indptr.shape[0] - 1
+    per_slot = jnp.where(
+        a_valid, bc_row_nnz[jnp.minimum(a.indices, nb - 1)], 0
+    ).astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(per_slot).astype(jnp.int32)]
+    )
+    t = jnp.arange(fm_cap, dtype=jnp.int32)
+    a_slot = (
+        jnp.searchsorted(offsets, t, side="right").astype(jnp.int32) - 1
+    ).clip(0, a.nnz_cap - 1)
+    within = t - offsets[a_slot]
+    valid = t < offsets[-1]
+    j = jnp.minimum(a.indices[a_slot], nb - 1)
+    cap = bc.csi.shape[0]
+    b_slot = (bc.indptr[j] + within).clip(0, cap - 1)
+    rows = jnp.where(valid, csr_row_ids(a.indptr, a.nnz_cap)[a_slot], m)
+    keys = jnp.where(valid, bc.csi[b_slot], 0)
+    cs = jnp.where(valid, bc.cs[b_slot], jnp.uint32(0))
+    return _symbolic_sorted(rows, keys, cs, valid, m, fm_cap)
+
+
+@partial(jax.jit, static_argnames=("fm_cap",))
+def symbolic_plain(a: CSR, b: CSR, fm_cap: int) -> jax.Array:
+    """Uncompressed symbolic: distinct-column count per row via sort."""
+    ex = expand_products(a, b, fm_cap)
+    ones = jnp.where(ex.valid, jnp.uint32(1), jnp.uint32(0))
+    return _symbolic_sorted(ex.row, ex.col, ones, ex.valid, a.m, fm_cap)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def symbolic_dense_bitmask(a_ell, b_bitmask: jax.Array, block_rows: int = 64) -> jax.Array:
+    """KKDENSE symbolic: per row-block, gather B's bitmask rows and OR-reduce
+    into a dense (block_rows, ceil(k/32)) accumulator — the dense-accumulator
+    symbolic with 32x compression. Memory-bounded via lax.map over blocks."""
+    m = a_ell.m
+    k32 = b_bitmask.shape[1]
+    r_pad = a_ell.r_pad
+    n_blocks = -(-m // block_rows)
+    pad_m = n_blocks * block_rows
+    idx = jnp.pad(a_ell.indices, ((0, pad_m - m), (0, 0)))
+    rnnz = jnp.pad(a_ell.row_nnz, (0, pad_m - m))
+    idx = idx.reshape(n_blocks, block_rows, r_pad)
+    rnnz = rnnz.reshape(n_blocks, block_rows)
+
+    def block(args):
+        bi, brn = args  # (block_rows, r_pad), (block_rows,)
+        masks = b_bitmask[bi.clip(0, b_bitmask.shape[0] - 1)]  # (BR, r_pad, k32)
+        live = (
+            jnp.arange(r_pad, dtype=jnp.int32)[None, :, None] < brn[:, None, None]
+        )
+        masks = jnp.where(live, masks, jnp.uint32(0))
+        acc = jax.lax.reduce(
+            masks, jnp.uint32(0), jnp.bitwise_or, dimensions=(1,)
+        )  # (BR, k32)
+        return jnp.sum(popcount(acc), axis=-1).astype(jnp.int32)
+
+    sizes = jax.lax.map(block, (idx, rnnz))
+    return sizes.reshape(pad_m)[:m]
+
+
+# --------------------------------------------------------------------------
+# Numeric phase
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("fm_cap", "nnz_cap"))
+def numeric_fresh(a: CSR, b: CSR, fm_cap: int, nnz_cap: int):
+    """First numeric run: discovers C's structure and the product->slot map,
+    computes values. Returns (CSR C, SpgemmPlan)."""
+    ex = expand_products(a, b, fm_cap)
+    order = jnp.lexsort((ex.col, ex.row)).astype(jnp.int32)
+    rows_s = ex.row[order]
+    cols_s = ex.col[order]
+    valid_s = ex.valid[order]
+    heads = jnp.concatenate(
+        [
+            jnp.ones((1,), jnp.bool_),
+            (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
+        ]
+    )
+    heads = heads & valid_s  # padding (row==m) groups don't mint slots
+    seg_ids = (jnp.cumsum(heads.astype(jnp.int32)) - 1).clip(0).astype(jnp.int32)
+
+    # C structure: one slot per group head.
+    c_indices = jnp.zeros((nnz_cap,), jnp.int32).at[seg_ids].max(
+        jnp.where(heads, cols_s, 0), mode="drop"
+    )
+    row_sizes = jnp.zeros((a.m,), jnp.int32).at[jnp.minimum(rows_s, a.m - 1)].add(
+        (heads & valid_s).astype(jnp.int32), mode="drop"
+    )
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(row_sizes).astype(jnp.int32)]
+    )
+    plan = SpgemmPlan(
+        indptr=indptr,
+        indices=c_indices,
+        order=order,
+        seg_ids=jnp.where(valid_s, seg_ids, nnz_cap),  # padded -> dropped
+        a_slot=ex.a_slot,
+        b_slot=ex.b_slot,
+        valid=ex.valid,
+        shape=(a.m, b.k),
+    )
+    values = numeric_reuse(plan, a.values, b.values)
+    c = CSR(indptr=indptr, indices=c_indices, values=values, shape=(a.m, b.k))
+    return c, plan
+
+
+@jax.jit
+def numeric_reuse(plan: SpgemmPlan, a_values: jax.Array, b_values: jax.Array) -> jax.Array:
+    """The Reuse case: same structure, new values. Gather products in sorted
+    order and segment-sum into C slots. No sort, no hash, no recompile."""
+    prod = jnp.where(
+        plan.valid, a_values[plan.a_slot] * b_values[plan.b_slot], 0
+    ).astype(a_values.dtype)
+    prod_sorted = prod[plan.order]
+    nnz_cap = plan.indices.shape[0]
+    return jnp.zeros((nnz_cap,), a_values.dtype).at[plan.seg_ids].add(
+        prod_sorted, mode="drop", indices_are_sorted=True
+    )
+
+
+@partial(jax.jit, static_argnames=("fm_cap", "nnz_cap"))
+def numeric_dense_acc(a: CSR, b: CSR, fm_cap: int, nnz_cap: int) -> CSR:
+    """KKDENSE numeric: scatter all products into a dense (m, k) accumulator,
+    then extract the CSR structure with a fixed-size nonzero scan. Chosen by
+    the meta-algorithm when k is small (paper: k < 250k). O(m*k) memory —
+    exactly the paper's dense-accumulator trade-off."""
+    ex = expand_products(a, b, fm_cap)
+    vals = jnp.where(ex.valid, a.values[ex.a_slot] * b.values[ex.b_slot], 0)
+    dense = jnp.zeros((a.m, b.k), a.dtype)
+    dense = dense.at[jnp.minimum(ex.row, a.m - 1), ex.col].add(
+        jnp.where(ex.valid, vals, 0), mode="drop"
+    )
+    # structure mask must come from the *symbolic* structure, not value!=0
+    # (cancellation must keep explicit zeros, like the paper's accumulators):
+    occupied = jnp.zeros((a.m, b.k), jnp.int32)
+    occupied = occupied.at[jnp.minimum(ex.row, a.m - 1), ex.col].max(
+        ex.valid.astype(jnp.int32), mode="drop"
+    )
+    rr, cc = jnp.nonzero(occupied, size=nnz_cap, fill_value=0)
+    got = jnp.arange(nnz_cap) < jnp.sum(occupied.astype(jnp.int32))
+    values = jnp.where(got, dense[rr, cc], 0)
+    indices = jnp.where(got, cc, 0).astype(jnp.int32)
+    row_sizes = jnp.sum(occupied.astype(jnp.int32), axis=1)
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(row_sizes).astype(jnp.int32)]
+    )
+    return CSR(indptr=indptr, indices=indices, values=values, shape=(a.m, b.k))
+
+
+# --------------------------------------------------------------------------
+# Host-level driver (the paper's Algorithm 2)
+# --------------------------------------------------------------------------
+
+
+class SpgemmResult(NamedTuple):
+    c: CSR
+    plan: SpgemmPlan | None
+    stats: dict
+
+
+def symbolic(a: CSR, b: CSR, compress: str = "auto"):
+    """Paper Alg. 2 lines 1-3. Returns (row_sizes, stats). Host-mediated:
+    decides compression by the CF<=0.85 rule and sizes the expansion."""
+    stats: dict = {}
+    fm, maxrf = (int(x) for x in _fm_scalars(a, b))
+    stats["fm"] = fm
+    stats["maxrf"] = maxrf
+    use_c = False
+    cf = cmrf = 1.0
+    bc = None
+    if compress in ("auto", "always"):
+        bc = compress_matrix(b)
+        cf, cmrf, use_c = compression_decision(a, b, bc)
+        if compress == "always":
+            use_c = True
+    stats["cf"], stats["cmrf"], stats["compressed"] = cf, cmrf, use_c
+    if use_c and bc is not None:
+        fm_c = max(int(jnp.sum(_per_slot(a, bc.row_nnz(), bc.indptr.shape[0] - 1))), 1)
+        cap = _round8(fm_c)
+        sizes = symbolic_compressed(a, bc, a.m, cap)
+    else:
+        cap = _round8(fm)
+        sizes = symbolic_plain(a, b, cap)
+    return sizes, stats
+
+
+def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto") -> SpgemmResult:
+    """Full two-phase SpGEMM with the KKSPGEMM meta-algorithm's method choice
+    (see core/meta.py for the heuristics)."""
+    from repro.core.meta import choose_method  # cycle-free late import
+
+    sizes, stats = symbolic(a, b, compress=compress)
+    nnz = int(jnp.sum(sizes))
+    nnz_cap = max(_round8(nnz), 8)
+    fm_cap = _round8(stats["fm"])
+    if method == "auto":
+        method = choose_method(a, b, stats)
+    stats["method"] = method
+    stats["nnz_c"] = nnz
+    if method == "dense":
+        c = numeric_dense_acc(a, b, fm_cap, nnz_cap)
+        plan = None
+    else:  # "sparse" — sorted-segment (flat-parallel semantics)
+        c, plan = numeric_fresh(a, b, fm_cap, nnz_cap)
+    return SpgemmResult(c=c, plan=plan, stats=stats)
+
+
+def _round8(x: int) -> int:
+    return max(-(-int(x) // 8) * 8, 8)
+
+
+@jax.jit
+def _fm_scalars(a: CSR, b: CSR):
+    fm, _, maxrf = flops_stats(a, b.row_nnz())
+    return fm, maxrf
+
+
+@jax.jit
+def _per_slot(a: CSR, row_nnz: jax.Array, nb: int):
+    valid = a.valid_mask()
+    return jnp.where(valid, row_nnz[jnp.minimum(a.indices, nb - 1)], 0)

@@ -1,0 +1,51 @@
+"""Jittable building blocks shared by the SpGEMM phases.
+
+The segmented scan is the TPU-native replacement for the paper's per-thread
+sequential accumulation loops: after sorting products by (row, key), each
+accumulator "group" is a contiguous segment, and an associative segmented scan
+performs the OR/ADD accumulation across all groups at once on the VPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_scan(values: jax.Array, seg_heads: jax.Array, op) -> jax.Array:
+    """Inclusive segmented scan: restart the scan at every ``seg_heads`` True.
+
+    The last element of each segment holds the segment's full reduction.
+    ``op`` must be associative. O(n log n) work, fully vectorized.
+    """
+    flags = seg_heads.astype(jnp.bool_)
+
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb, vb, op(va, vb))
+
+    _, out = jax.lax.associative_scan(combine, (flags, values))
+    return out
+
+
+def segment_ends(seg_heads: jax.Array) -> jax.Array:
+    """True at the last element of each segment."""
+    return jnp.concatenate(
+        [seg_heads[1:], jnp.ones((1,), seg_heads.dtype)]
+    ).astype(jnp.bool_)
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    return jax.lax.population_count(x)
+
+
+def exclusive_cumsum(x: jax.Array) -> jax.Array:
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b

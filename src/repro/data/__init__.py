@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, TokenFileDataset, make_labels
+
+__all__ = ["SyntheticLMDataset", "TokenFileDataset", "make_labels"]

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the paper's compute hot-spots + LM substrate.
+
+Each kernel module contains the pl.pallas_call + BlockSpec implementation;
+``ops.py`` holds the jit'd public wrappers; ``ref.py`` the pure-jnp oracles
+every kernel is validated against (interpret=True) in tests/test_kernels.py.
+
+Kernels:
+  spgemm_symbolic  — symbolic phase, bitmask-compressed dense accumulator
+  spgemm_numeric   — numeric phase, dense VMEM accumulator + one-hot MXU
+  grouped_matmul   — MoE expert dispatch (two-phase SpGEMM specialization)
+  flash_attention  — GQA / sliding-window / softcap blocked attention
+  bsr_spgemm       — block-sparse (BSR) numeric phase: one MXU matmul per
+                     grid step, plan-steered gathers (the MXU flagship)
+"""
+from repro.kernels.spgemm_symbolic import spgemm_symbolic
+from repro.kernels.spgemm_numeric import spgemm_numeric
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.bsr_spgemm import bsr_spgemm_numeric, plan_bsr_numeric
+
+__all__ = [
+    "spgemm_symbolic",
+    "spgemm_numeric",
+    "grouped_matmul",
+    "flash_attention",
+    "bsr_spgemm_numeric",
+    "plan_bsr_numeric",
+]

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: block-sparse (BSR) SpGEMM numeric phase.
+
+The MXU-native end of the accumulator spectrum (DESIGN.md §2.1): for
+block-structured matrices (FEM/multigrid with dense node blocks), the
+element-wise accumulators collapse into dense (bs, bs) block products —
+each grid step is ONE MXU matmul A_block @ B_block accumulated into its C
+block.
+
+Two-phase discipline at block granularity:
+  * symbolic (host/XLA, `plan_bsr_numeric`): for every C block, the list of
+    contributing (A-block, B-block) index pairs — the paper's structure
+    discovery, reusable across value changes;
+  * numeric (this kernel): grid = (C blocks, max_contrib); the plan's
+    scalar-prefetched indices steer the A/B block gathers via index_maps,
+    and contributions accumulate in a VMEM tile (contiguous revisiting —
+    Thread-Sequential semantics, no atomics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def plan_bsr_numeric(a_indptr, a_indices, b_indptr, b_indices):
+    """Host-side symbolic phase on the block graph.
+
+    Inputs: BSR structure arrays (numpy). Returns (c_indptr, c_indices,
+    contrib_a, contrib_b, contrib_n) where contrib_* have shape
+    (nnzb_C, T_max) listing contributing A/B block slots per C block.
+    """
+    a_indptr = np.asarray(a_indptr)
+    a_indices = np.asarray(a_indices)
+    b_indptr = np.asarray(b_indptr)
+    b_indices = np.asarray(b_indices)
+    mb = len(a_indptr) - 1
+
+    c_cols: list[list[int]] = []
+    contribs: list[dict] = []
+    c_indptr = [0]
+    for i in range(mb):
+        acc: dict[int, list] = {}
+        for e in range(a_indptr[i], a_indptr[i + 1]):
+            j = int(a_indices[e])
+            for f in range(b_indptr[j], b_indptr[j + 1]):
+                c = int(b_indices[f])
+                acc.setdefault(c, []).append((e, f))
+        cols = sorted(acc)
+        c_cols.append(cols)
+        contribs.append(acc)
+        c_indptr.append(c_indptr[-1] + len(cols))
+
+    nnzb_c = c_indptr[-1]
+    t_max = max(
+        (len(v) for row in contribs for v in row.values()), default=1
+    )
+    contrib_a = np.zeros((nnzb_c, t_max), np.int32)
+    contrib_b = np.zeros((nnzb_c, t_max), np.int32)
+    contrib_n = np.zeros((nnzb_c,), np.int32)
+    c_indices = np.zeros((nnzb_c,), np.int32)
+    slot = 0
+    for i in range(mb):
+        for c in c_cols[i]:
+            pairs = contribs[i][c]
+            contrib_n[slot] = len(pairs)
+            for t, (e, f) in enumerate(pairs):
+                contrib_a[slot, t] = e
+                contrib_b[slot, t] = f
+            c_indices[slot] = c
+            slot += 1
+    return (
+        np.asarray(c_indptr, np.int32), c_indices,
+        contrib_a, contrib_b, contrib_n,
+    )
+
+
+def _kernel(ca_ref, cb_ref, cn_ref, a_ref, b_ref, out_ref, acc_ref):
+    s = pl.program_id(0)  # C block slot
+    t = pl.program_id(1)  # contribution index
+    n_t = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = t < cn_ref[s]
+    prod = jnp.dot(
+        a_ref[0].astype(jnp.float32), b_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] += jnp.where(live, prod, 0.0)
+
+    @pl.when(t == n_t - 1)
+    def _emit():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_spgemm_numeric(a_blocks, b_blocks, contrib_a, contrib_b, contrib_n,
+                       *, interpret: bool = False):
+    """Numeric phase. a_blocks: (nnzb_A, bs, bs); b_blocks: (nnzb_B, bs, bs);
+    plan arrays from plan_bsr_numeric. Returns (nnzb_C, bs, bs)."""
+    nnzb_c, t_max = contrib_a.shape
+    bs = a_blocks.shape[1]
+    grid = (nnzb_c, t_max)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bs, bs), lambda s, t, ca, cb, cn: (ca[s, t], 0, 0)),
+                pl.BlockSpec((1, bs, bs), lambda s, t, ca, cb, cn: (cb[s, t], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bs, bs), lambda s, t, ca, cb, cn: (s, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((bs, bs), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((nnzb_c, bs, bs), a_blocks.dtype),
+        interpret=interpret,
+    )(contrib_a, contrib_b, contrib_n, a_blocks, b_blocks)
+
+
+def bsr_spgemm_ref(a_blocks, a_indptr, a_indices, b_blocks, b_indptr,
+                   b_indices, c_indptr, c_indices):
+    """Pure-numpy oracle: per-C-block sum of A_ie @ B_ef products."""
+    a_blocks = np.asarray(a_blocks)
+    b_blocks = np.asarray(b_blocks)
+    bs = a_blocks.shape[1]
+    out = np.zeros((c_indptr[-1], bs, bs), a_blocks.dtype)
+    mb = len(a_indptr) - 1
+    for i in range(mb):
+        cmap = {
+            int(c): s for s, c in enumerate(c_indices[c_indptr[i]: c_indptr[i + 1]],
+                                            start=c_indptr[i])
+        }
+        for e in range(a_indptr[i], a_indptr[i + 1]):
+            j = int(a_indices[e])
+            for f in range(b_indptr[j], b_indptr[j + 1]):
+                c = int(b_indices[f])
+                out[cmap[c]] += a_blocks[e].astype(np.float32) @ \
+                    b_blocks[f].astype(np.float32)
+    return out

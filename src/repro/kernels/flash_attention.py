@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: blocked flash attention with GQA, sliding window and
+logit soft-capping (gemma2), causal masking.
+
+Grid = (heads, q_blocks, kv_blocks); online softmax with running (m, l)
+statistics in VMEM scratch. KV blocks for query head h come from KV head
+h // group via the index_map (GQA without materializing repeated KV).
+
+This kernel is the training/prefill path on real TPU hardware; the CPU-back
+dry-run uses the XLA reference (`ref.flash_attention_ref`) since Pallas
+lowers only to TPU (see DESIGN.md §7). Numerics are validated in
+interpret mode against the reference in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window, softcap, block_q: int,
+            block_k: int):
+    qt = pl.program_id(1)
+    kt = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kt == 0)
+    def _zero():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)  # (BK, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = qt * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
+    kpos = kt * block_k + jax.lax.iota(jnp.int32, block_k)[None, :]
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (BQ, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(kt == n_k - 1)
+    def _emit():
+        # fully-masked rows (can happen with windows) produce l == 0
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        out_ref[0] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (Hq, Tq, D); k, v: (Hkv, Tk, D); returns (Hq, Tq, D)."""
+    hq, tq, d = q.shape
+    hkv, tk, _ = k.shape
+    assert hq % hkv == 0 and tq % block_q == 0 and tk % block_k == 0
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (hq, tq // block_q, tk // block_k)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qt, kt: (h, qt, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qt, kt: (h // group, kt, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qt, kt: (h // group, kt, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, qt, kt: (h, qt, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

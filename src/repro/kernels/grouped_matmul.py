@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: expert-grouped matmul — the MoE numeric phase.
+
+MoE dispatch is the one place modern LMs contain a true sparse-matrix
+product (DESIGN.md §4): the token->expert dispatch matrix is a top-k-sparse
+CSR whose "row pointers" are the per-expert group offsets. Routing is the
+symbolic phase (counts only, no FLOPs); this kernel is the numeric phase —
+Gustavson's row-wise accumulation at block granularity, with the B-block
+gather (here: the expert weight tile) steered by the scalar-prefetched group
+structure exactly like spgemm_numeric steers its B-row gather.
+
+Tokens arrive sorted by expert and padded so no block spans two experts.
+grid = (token_blocks, f_tiles, d_tiles); weights for block tb come from
+``block_expert[tb]`` via the index_map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TM = 128  # token-block rows (MXU-aligned)
+
+
+def _kernel(block_expert_ref, x_ref, w_ref, out_ref, acc_ref):
+    dt = pl.program_id(2)
+    n_d = pl.num_programs(2)
+
+    @pl.when(dt == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(dt == n_d - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_f", "tile_d", "interpret"))
+def grouped_matmul(x: jax.Array, w: jax.Array, block_expert: jax.Array, *,
+                   tile_f: int = 128, tile_d: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """y[t] = x[t] @ w[expert(t)] for expert-sorted, block-aligned tokens.
+
+    x: (T, d) with T % TM == 0; w: (E, d, f); block_expert: (T // TM,) int32.
+    """
+    t, d = x.shape
+    e, dw, f = w.shape
+    assert d == dw and t % TM == 0 and d % tile_d == 0 and f % tile_f == 0
+
+    grid = (t // TM, f // tile_f, d // tile_d)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TM, tile_d), lambda tb, ft, dt, be: (tb, dt)),
+                pl.BlockSpec(
+                    (1, tile_d, tile_f), lambda tb, ft, dt, be: (be[tb], dt, ft)
+                ),
+            ],
+            out_specs=pl.BlockSpec((TM, tile_f), lambda tb, ft, dt, be: (tb, ft)),
+            scratch_shapes=[pltpu.VMEM((TM, tile_f), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
+        interpret=interpret,
+    )(block_expert, x, w)

@@ -1,0 +1,105 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These own the format plumbing (CSR -> ELL / bitmask, lane padding) and the
+backend dispatch: on non-TPU backends the kernels run in interpret mode
+(Pallas lowers only to TPU), so the same call sites work on the CPU test rig
+and on real hardware. ``impl="xla"`` falls back to the pure-jnp references
+— the dry-run path, since the CPU dry-run cannot lower TPU kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import bitmask_rows
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import TM, grouped_matmul
+from repro.kernels.spgemm_numeric import spgemm_numeric
+from repro.kernels.spgemm_symbolic import spgemm_symbolic
+from repro.sparse.formats import CSR, csr_to_ell
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def symbolic_rowsizes(a: CSR, b: CSR) -> jax.Array:
+    """Kernel-backed symbolic phase: (m,) row sizes of C = A*B."""
+    ell = csr_to_ell(a)
+    bm = bitmask_rows(b)
+    pad = (-bm.shape[1]) % 128
+    if pad:
+        bm = jnp.pad(bm, ((0, 0), (0, pad)))
+    return spgemm_symbolic(ell.indices, ell.row_nnz, bm, interpret=_interpret())
+
+
+def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array) -> jax.Array:
+    """Kernel-backed numeric phase: ELL-layout values of C at the symbolic
+    structure ``c_idx``/``c_nnz`` (the Reuse entry point)."""
+    ea = csr_to_ell(a)
+    eb = csr_to_ell(b)
+    return spgemm_numeric(
+        ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
+        c_idx, c_nnz, k=b.k, interpret=_interpret(),
+    )
+
+
+def pallas_spgemm(a: CSR, b: CSR) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full two-phase kernel pipeline. Returns (c_nnz, c_idx, c_val) with C
+    in ELL layout; the host decides rC between the phases (two-phase
+    contract). Structure extraction uses the core sort path."""
+    from repro.core.spgemm import host_fm_cap, numeric_fresh
+
+    sizes = symbolic_rowsizes(a, b)
+    r_c = max(int(jnp.max(sizes)), 1)
+    # structure via the core path (host-mediated static sizes)
+    fm_cap = host_fm_cap(a, b)
+    nnz = int(jnp.sum(sizes))
+    nnz_cap = max(-(-nnz // 8) * 8, 8)
+    c, _ = numeric_fresh(a, b, fm_cap, nnz_cap)
+    # CSR -> ELL structure for the kernel
+    c_ell = csr_to_ell(
+        CSR(indptr=c.indptr, indices=c.indices, values=c.values, shape=c.shape),
+        r_pad=r_c,
+    )
+    vals = numeric_values(a, b, c_ell.indices, c_ell.row_nnz)
+    return c_ell.row_nnz, c_ell.indices, vals
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: int | None = None, softcap: float | None = None,
+              impl: str = "auto", segment_pos=None) -> jax.Array:
+    """Multi-head attention over (H, T, D) tensors with GQA broadcast.
+
+    impl: "pallas" (TPU kernel / interpret), "xla" (reference einsum path —
+    used by the dry-run), "auto" (pallas on TPU, xla elsewhere).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla" or segment_pos is not None:
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            segment_pos=segment_pos,
+        )
+    tq = q.shape[1]
+    bq = min(128, tq)
+    bk = min(128, k.shape[1])
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+
+
+def expert_matmul(x: jax.Array, w: jax.Array, block_expert: jax.Array, *,
+                  impl: str = "auto") -> jax.Array:
+    """Grouped (expert) matmul for expert-sorted token blocks of width TM."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        gid = jnp.repeat(block_expert, TM, total_repeat_length=x.shape[0])
+        return ref.grouped_matmul_ref(x, w, gid)
+    return grouped_matmul(x, w, block_expert, interpret=_interpret())

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested against
+(interpret=True sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spgemm_symbolic_ref(a_idx, a_nnz, b_bitmask):
+    """Row sizes of C: popcount of the OR of B's bitmask rows selected by A.
+
+    a_idx: (m, rA) int32 ELL columns of A; a_nnz: (m,) live widths;
+    b_bitmask: (n, k32) uint32. Returns (m,) int32.
+    """
+    m, rA = a_idx.shape
+    live = jnp.arange(rA, dtype=jnp.int32)[None, :] < a_nnz[:, None]
+    rows = b_bitmask[a_idx.clip(0, b_bitmask.shape[0] - 1)]  # (m, rA, k32)
+    rows = jnp.where(live[:, :, None], rows, jnp.uint32(0))
+    acc = jax.lax.reduce(rows, jnp.uint32(0), jnp.bitwise_or, dimensions=(1,))
+    return jnp.sum(jax.lax.population_count(acc), axis=-1).astype(jnp.int32)
+
+
+def spgemm_numeric_ref(a_idx, a_val, b_idx, b_val, c_idx, c_nnz, k):
+    """ELL-in/ELL-out numeric phase: C values at the symbolic structure.
+
+    a_idx/a_val: (m, rA); b_idx/b_val: (n, rB); c_idx: (m, rC) symbolic
+    structure (padded slots arbitrary); c_nnz: (m,). Returns (m, rC) values.
+    Dense accumulator semantics (KKDENSE): scatter products into a dense row,
+    gather at the structure's columns.
+    """
+    m, rA = a_idx.shape
+    n, rB = b_idx.shape
+
+    def row(ai, av, ci, cn):
+        bi = b_idx[ai.clip(0, n - 1)]  # (rA, rB)
+        bv = b_val[ai.clip(0, n - 1)]
+        prod = av[:, None] * bv  # (rA, rB) — padded a_val==0 kills phantom rows
+        acc = jnp.zeros((k,), prod.dtype).at[bi.reshape(-1)].add(prod.reshape(-1))
+        out = acc[ci.clip(0, k - 1)]
+        return jnp.where(jnp.arange(ci.shape[0]) < cn, out, 0)
+
+    return jax.vmap(row)(a_idx, a_val, c_idx, c_nnz)
+
+
+def grouped_matmul_ref(x, w, group_ids):
+    """Per-token expert matmul: y[t] = x[t] @ w[group_ids[t]].
+
+    x: (T, d); w: (E, d, f); group_ids: (T,) int32. Returns (T, f).
+    """
+    return jnp.einsum("td,tdf->tf", x, w[group_ids])
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        segment_pos=None):
+    """Reference attention. q: (Hq, Tq, D), k/v: (Hkv, Tk, D) — GQA via
+    head-group broadcasting. Scores in f32. window = sliding-window size
+    (gemma2 local layers); softcap = logit soft-capping value.
+    segment_pos: (Tq,) absolute positions of q (for decode; default arange).
+    """
+    hq, tq, d = q.shape
+    hkv = k.shape[0]
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    tk = k.shape[1]
+    qpos = (jnp.arange(tq, dtype=jnp.int32) if segment_pos is None
+            else segment_pos.astype(jnp.int32))
+    kpos = jnp.arange(tk, dtype=jnp.int32)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,hsd->htd", p, vq.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: SpGEMM numeric phase with a dense VMEM accumulator.
+
+This is KKDENSE's numeric phase adapted to the MXU (DESIGN.md §2.1): the
+per-row dense accumulator is a (1, k_pad) f32 VMEM tile; scatter of a B-row's
+products is a one-hot matmul (vals @ onehot(cols)) and the final gather at
+C's symbolic structure is the transposed one-hot matmul — both MXU ops,
+replacing GPU per-lane atomics with associative matrix products.
+
+Partitioning: Thread-Sequential (grid (m, rA)) — one C row per outer grid
+step; lane parallelism covers B-row nonzeros; the B-row gather is steered by
+the scalar-prefetched A structure via the BlockSpec index_map.
+
+Two-phase contract: the kernel takes C's structure (from the symbolic
+kernel) and writes values in ELL layout — reuse re-invokes only this kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# one-hot scatter tile width along the dense-accumulator (column) axis
+K_TILE = 512
+
+
+def _kernel(a_idx_ref, a_nnz_ref, c_nnz_ref,  # scalar prefetch
+            a_val_ref, b_idx_ref, b_val_ref, c_idx_ref,  # VMEM inputs
+            out_ref,  # VMEM output (1, rC)
+            acc_ref):  # VMEM scratch (1, k_pad) f32
+    i = pl.program_id(0)
+    r = pl.program_id(1)
+    n_r = pl.num_programs(1)
+    k_pad = acc_ref.shape[1]
+    r_b = b_idx_ref.shape[1]
+    r_c = out_ref.shape[1]
+
+    @pl.when(r == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = r < a_nnz_ref[i]
+    a_val = jnp.where(live, a_val_ref[0, r], 0.0)
+    cols = b_idx_ref[0, :]  # (rB,)
+    scaled = (a_val * b_val_ref[0, :].astype(jnp.float32))[None, :]  # (1, rB)
+
+    def scatter_tile(t, _):
+        base = t * K_TILE
+        # one-hot (rB, K_TILE) on the MXU: scatter == matmul
+        onehot = (
+            cols[:, None] == base + jax.lax.iota(jnp.int32, K_TILE)[None, :]
+        ).astype(jnp.float32)
+        tile = jnp.dot(scaled, onehot, preferred_element_type=jnp.float32)
+        cur = pl.load(acc_ref, (slice(None), pl.dslice(base, K_TILE)))
+        pl.store(acc_ref, (slice(None), pl.dslice(base, K_TILE)), cur + tile)
+        return 0
+
+    jax.lax.fori_loop(0, k_pad // K_TILE, scatter_tile, 0)
+
+    @pl.when(r == n_r - 1)
+    def _emit():
+        c_cols = c_idx_ref[0, :]  # (rC,)
+
+        def gather_tile(t, out):
+            base = t * K_TILE
+            onehot = (
+                base + jax.lax.iota(jnp.int32, K_TILE)[:, None] == c_cols[None, :]
+            ).astype(jnp.float32)  # (K_TILE, rC)
+            seg = pl.load(acc_ref, (slice(None), pl.dslice(base, K_TILE)))
+            return out + jnp.dot(seg, onehot, preferred_element_type=jnp.float32)
+
+        vals = jax.lax.fori_loop(
+            0, k_pad // K_TILE, gather_tile, jnp.zeros((1, r_c), jnp.float32)
+        )
+        mask = jax.lax.iota(jnp.int32, r_c)[None, :] < c_nnz_ref[i]
+        out_ref[...] = jnp.where(mask, vals, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def spgemm_numeric(a_idx, a_val, a_nnz, b_idx, b_val, c_idx, c_nnz, *,
+                   k: int, interpret: bool = False) -> jax.Array:
+    """Numeric phase: C values (ELL layout, (m, rC)) at the given structure.
+
+    a_idx/a_val: (m, rA) ELL of A; a_nnz: (m,); b_idx/b_val: (n, rB) ELL of B
+    (padded B slots must carry value 0); c_idx: (m, rC) symbolic structure of
+    C; c_nnz: (m,); k: number of columns of B (static).
+    """
+    m, r_a = a_idx.shape
+    n, r_b = b_idx.shape
+    r_c = c_idx.shape[1]
+    k_pad = -(-k // K_TILE) * K_TILE
+
+    grid = (m, r_a)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, r_a), lambda i, r, ai, an, cn: (i, 0)),
+                pl.BlockSpec((1, r_b), lambda i, r, ai, an, cn: (ai[i, r], 0)),
+                pl.BlockSpec((1, r_b), lambda i, r, ai, an, cn: (ai[i, r], 0)),
+                pl.BlockSpec((1, r_c), lambda i, r, ai, an, cn: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, r_c), lambda i, r, ai, an, cn: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((1, k_pad), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, r_c), a_val.dtype),
+        interpret=interpret,
+    )(a_idx, a_nnz, c_nnz, a_val, b_idx, b_val, c_idx)
+    return out

@@ -1,0 +1,196 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable closure.
+
+``input_specs`` provides ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation). ``build_cell`` returns
+the jitted function + abstract args + shardings for ``.lower()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import dp_size, rules_for_mesh
+from repro.models import (
+    cache_shardings,
+    cache_template,
+    decode_step,
+    forward,
+    param_shardings,
+    param_specs,
+)
+from repro.models.sharding import ShardingRules
+from repro.train.optim import AdamWConfig, OptState, zero1_shardings
+from repro.train.step import train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def lower(self):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        return jitted.lower(*self.args)
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool):
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for one batch."""
+    gb, t = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {}
+    shards: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((gb, t, cfg.frontend_dim), jnp.float32)
+        shards["frames"] = P("__dp__", None, None)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((gb, t), jnp.int32)
+        shards["tokens"] = P("__dp__", None)
+        if cfg.frontend == "vision":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (gb, cfg.num_patches, cfg.frontend_dim), jnp.float32
+            )
+            shards["patches"] = P("__dp__", None, None)
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((gb, t), jnp.int32)
+        shards["labels"] = P("__dp__", None)
+    return specs, shards
+
+
+def _resolve_dp(tree, dp, gb: int, dp_total: int):
+    """Replace the '__dp__' placeholder; drop it if batch doesn't divide."""
+    use = dp if gb % dp_total == 0 else None
+
+    def fix(spec):
+        return P(*[use if d == "__dp__" else d for d in spec])
+
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public deliverable: abstract input stand-ins for an (arch, shape)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    with_labels = shape.kind == "train"
+    specs, _ = batch_specs(cfg, shape, with_labels=with_labels)
+    return specs
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False) -> Cell:
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    rules = rules_for_mesh(mesh)
+    dp = rules.dp
+    dp_total = dp_size(mesh)
+    gb, t = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        p_dtype = jnp.float32
+        p_specs = param_specs(cfg, rules, dtype=p_dtype)
+        p_shard = param_shardings(cfg, rules)
+        opt_specs = OptState(
+            mu=jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_specs
+            ),
+            nu=jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_specs
+            ),
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        opt_shard = OptState(
+            mu=zero1_shardings(p_shard, rules.dp_axes, dict(mesh.shape), p_specs),
+            nu=zero1_shardings(p_shard, rules.dp_axes, dict(mesh.shape), p_specs),
+            step=P(),
+        )
+        b_specs, b_shard = batch_specs(cfg, shape, with_labels=True)
+        b_shard = _resolve_dp(b_shard, dp, gb, dp_total)
+        opt_cfg = AdamWConfig()
+        # Microbatching keeps the per-step working set under HBM: MoE carries
+        # big routing/dispatch buffers; SSD materializes chunk decay blocks;
+        # qwen2's replicated-attention fallback keeps full-T q/kv per shard.
+        num_microbatches = {"moe": 4, "ssm": 4}.get(cfg.family, 1)
+        if cfg.num_heads % rules.tp_size:
+            num_microbatches = max(num_microbatches, 2)
+
+        def fn(params, opt_state, batch):
+            return train_step(
+                params, opt_state, batch, cfg, rules, opt_cfg, mesh=mesh,
+                num_microbatches=num_microbatches,
+            )
+
+        metrics_shard = {"grad_norm": P(), "lr": P(), "loss": P()}
+        return Cell(
+            arch=arch, shape=shape, fn=fn,
+            args=(p_specs, opt_specs, b_specs),
+            in_shardings=_named(mesh, (p_shard, opt_shard, b_shard)),
+            out_shardings=_named(mesh, (p_shard, opt_shard, metrics_shard)),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        p_specs = param_specs(cfg, rules, dtype=jnp.bfloat16)
+        p_shard = param_shardings(cfg, rules)
+        b_specs, b_shard = batch_specs(cfg, shape, with_labels=False)
+        b_shard = _resolve_dp(b_shard, dp, gb, dp_total)
+        return_caches = cfg.causal  # encoder has no serving cache
+
+        def fn(params, batch):
+            logits, caches = forward(
+                params, batch, cfg, rules, mesh=mesh,
+                return_caches=return_caches, remat=False, max_len=t,
+            )
+            return logits, caches
+
+        return Cell(
+            arch=arch, shape=shape, fn=fn,
+            args=(p_specs, b_specs),
+            in_shardings=_named(mesh, (p_shard, b_shard)),
+            out_shardings=None,
+        )
+
+    # decode
+    long_ctx = gb % dp_total != 0
+    rules = dataclasses.replace(rules, decode=True, long_context=long_ctx)
+    p_specs = param_specs(cfg, rules, dtype=jnp.bfloat16)
+    p_shard = param_shardings(cfg, rules)
+    c_specs = cache_template(cfg, gb, max_len=t, dtype=jnp.bfloat16)
+    c_shard = cache_shardings(cfg, rules, gb, t, long_context=long_ctx)
+    tok = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+    tok_shard = P(dp if gb % dp_total == 0 else None, None)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, caches, tokens, position):
+        return decode_step(
+            params, caches, tokens, position, cfg, rules, mesh=mesh, max_len=t
+        )
+
+    logits_shard = P(dp if gb % dp_total == 0 else None, None, None)
+    return Cell(
+        arch=arch, shape=shape, fn=fn,
+        args=(p_specs, c_specs, tok, pos),
+        in_shardings=_named(mesh, (p_shard, c_shard, tok_shard, P())),
+        out_shardings=_named(mesh, (logits_shard, c_shard)),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+MUST be run as a module entry point (python -m repro.launch.dryrun) so the
+XLA flag above executes before any jax import in the process.
+
+Per cell: prints memory_analysis() (proves it fits) and cost_analysis()
+(FLOPs/bytes for the roofline), extracts collective bytes from the compiled
+HLO, and appends a JSON record consumed by EXPERIMENTS.md tooling.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, all_cells, get_config, skip_reason  # noqa: E402
+from repro.launch.cells import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import analyze  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+             verbose: bool = True, hlo_dir: str | None = None) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    cell = build_cell(arch, shape_name, mesh, smoke=smoke)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        mesh_name = "x".join(str(mesh.shape[n]) for n in mesh.axis_names)
+        fname = f"{arch}__{shape_name}__{mesh_name}.hlo.gz"
+        with gzip.open(os.path.join(hlo_dir, fname), "wt") as hf:
+            hf.write(compiled.as_text())
+    mem = compiled.memory_analysis()
+    roof = analyze(compiled, arch=arch, shape=SHAPES[shape_name], mesh=mesh,
+                   cfg=cfg)
+    rec = roof.row()
+    rec.update(
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        smoke=smoke, status="ok",
+    )
+    if mem is not None:
+        try:
+            rec["memory_analysis"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+            }
+        except AttributeError:
+            rec["memory_analysis"] = str(mem)
+    if verbose:
+        print(f"--- {arch} x {shape_name} x {rec['mesh']} ---")
+        print("memory_analysis:", rec.get("memory_analysis"))
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0))))
+        print("collectives:", rec["coll_breakdown"])
+        print("terms: compute=%.4fs memory=%.4fs collective=%.4fs dominant=%s"
+              % (rec["t_compute_s"], rec["t_memory_s"], rec["t_collective_s"],
+                 rec["dominant"]))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="save compiled HLO text (gzip) per cell")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    cells = list(all_cells())
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    n_ok = n_fail = 0
+    with open(args.out, "a") as f:
+        for mesh in meshes:
+            for arch, shape in cells:
+                reason = skip_reason(arch, shape)
+                if reason:
+                    print(f"SKIP {arch} x {shape}: {reason}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mesh, smoke=args.smoke,
+                                   hlo_dir=args.hlo_dir)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "x".join(str(mesh.shape[n]) for n in mesh.axis_names),
+                        "status": "fail", "error": repr(e)[:500],
+                    }
+                    n_fail += 1
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+    print(f"\nDRY-RUN: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

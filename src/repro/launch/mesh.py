@@ -1,0 +1,54 @@
+"""Production mesh construction (spec'd shapes) + sharding-rule factory.
+
+make_production_mesh is a FUNCTION so importing this module never touches
+jax device state; the dry-run sets the 512-placeholder-device XLA flag
+before any jax initialization (launch/dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for the 8-device subprocess tests."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def rules_for_mesh(mesh) -> ShardingRules:
+    names = mesh.axis_names
+    if "model" in names:
+        tp_axis = "model"
+        tp_size = mesh.shape["model"]
+    else:
+        tp_axis, tp_size = None, 1
+    dp_axes = tuple(n for n in names if n in ("pod", "data"))
+    dp_total = 1
+    for n in dp_axes:
+        dp_total *= mesh.shape[n]
+    return ShardingRules(
+        dp_axes=dp_axes or ("data",),
+        tp_axis=tp_axis,
+        tp_size=tp_size,
+        dp_size=dp_total,
+        enabled=True,
+    )
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for n in mesh.axis_names:
+        if n in ("pod", "data"):
+            out *= mesh.shape[n]
+    return out

@@ -1,0 +1,74 @@
+"""Re-derive roofline records from saved HLO artifacts (no recompilation).
+
+The dry-run saves every cell's compiled HLO (hlo/*.hlo.gz); when the cost
+model in hlo_cost.py is refined, this tool regenerates the roofline columns
+in-place, preserving memory_analysis / compile-time fields.
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops_for
+
+
+def reanalyze(rec: dict, hlo_dir: str) -> dict:
+    fname = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.hlo.gz"
+    path = os.path.join(hlo_dir, fname)
+    if not os.path.exists(path) or rec.get("status") != "ok":
+        return rec
+    with gzip.open(path, "rt") as f:
+        parsed = analyze_hlo(f.read())
+    chips = 1
+    for d in rec["mesh"].split("x"):
+        chips *= int(d)
+    cfg = get_config(rec["arch"])
+    mf = model_flops_for(cfg, SHAPES[rec["shape"]])
+    flops, byts = parsed["flops"], parsed["bytes"]
+    coll = parsed["collectives"]
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_l = coll["total"] / ICI_BW
+    bound = max(t_c, t_m, t_l)
+    rec.update(
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=byts,
+        model_flops=mf,
+        t_compute_s=t_c,
+        t_memory_s=t_m,
+        t_collective_s=t_l,
+        dominant=max(
+            {"compute": t_c, "memory": t_m, "collective": t_l}.items(),
+            key=lambda kv: kv[1],
+        )[0],
+        useful_flops_ratio=mf / max(chips * flops, 1.0),
+        roofline_fraction=(t_c / bound) if bound else 0.0,
+        coll_breakdown=coll,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="dryrun_results.jsonl")
+    ap.add_argument("--hlo-dir", default="hlo")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_path = args.out or args.jsonl
+    recs = {}
+    for line in open(args.jsonl):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    with open(out_path + ".tmp", "w") as f:
+        for key in sorted(recs):
+            f.write(json.dumps(reanalyze(recs[key], args.hlo_dir)) + "\n")
+    os.replace(out_path + ".tmp", out_path)
+    print(f"re-analyzed {len(recs)} records -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

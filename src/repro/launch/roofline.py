@@ -1,0 +1,185 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e constants):
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = collective_bytes_per_chip / 50e9   (per-link, ICI)
+
+CALIBRATION (verified empirically in this container): with SPMD
+partitioning, compiled.cost_analysis() and memory_analysis() describe the
+PER-CHIP module — a 16-way-sharded 2N^3-FLOP matmul reports 2N^3/16. So
+per-chip flops/peak == HLO_total/(chips*peak): the spec formula, one chip at
+a time. Collective result shapes in the per-chip HLO are per-chip bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind result bytes of every collective in the (SPMD, per-chip)
+    module. Returns {'all-reduce': bytes, ..., 'total': bytes, 'count': n}."""
+    out: dict[str, float] = {}
+    count = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # skip the *-done wrappers (they repeat the shape but have no '(')
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["count"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per-chip (SPMD module; see calibration note)
+    hlo_bytes: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict
+    bytes_per_chip_peak: float  # from memory_analysis
+    model_flops: float  # 6*N*D (or 6*N_active*D)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS  # per-chip flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW  # per-chip bytes
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.chips * self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / total (how close the dominant mix is to pure
+        compute — 1.0 == perfectly compute-bound at the roofline)."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / bound if bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "model_flops": self.model_flops,
+            "xla_flops_raw": getattr(self, "xla_flops", None),
+            "xla_bytes_raw": getattr(self, "xla_bytes", None),
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_chip_peak": self.bytes_per_chip_peak,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D per the spec: N = (active) params, D = tokens per step.
+
+    decode steps process global_batch tokens; train/prefill process
+    global_batch * seq_len.
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        d = shape.global_batch
+    else:
+        d = shape.global_batch * shape.seq_len
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * d)
+
+
+def analyze(compiled, *, arch: str, shape, mesh, cfg) -> Roofline:
+    """Primary costs come from the multiplicity-aware HLO parser
+    (launch/hlo_cost.py) because XLA's cost_analysis() counts while-loop
+    (scan) bodies once — verified empirically; see hlo_cost docstring."""
+    from repro.launch.hlo_cost import analyze_hlo
+
+    chips = 1
+    for n in mesh.axis_names:
+        chips *= mesh.shape[n]
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    hlo = compiled.as_text()
+    parsed = analyze_hlo(hlo)
+    flops = float(parsed["flops"])
+    byts = float(parsed["bytes"])
+    coll = dict(parsed["collectives"])
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        try:
+            peak = float(
+                mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+            )
+        except AttributeError:
+            peak = 0.0
+    mesh_name = "x".join(str(mesh.shape[n]) for n in mesh.axis_names)
+    r = Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes_per_chip=float(coll["total"]),
+        coll_breakdown=coll, bytes_per_chip_peak=peak,
+        model_flops=model_flops_for(cfg, shape),
+    )
+    # keep XLA's raw (scan-undercounting) numbers for reference
+    r.xla_flops = float(cost.get("flops", 0.0))  # type: ignore[attr-defined]
+    r.xla_bytes = float(cost.get("bytes accessed", 0.0))  # type: ignore[attr-defined]
+    return r

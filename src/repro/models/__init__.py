@@ -1,0 +1,27 @@
+"""Model zoo: configurable transformer/SSM/hybrid/MoE stacks."""
+from repro.models.model import (
+    cache_shardings,
+    cache_template,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    model_template,
+    param_shardings,
+    param_specs,
+)
+from repro.models.sharding import NO_SHARDING, ShardingRules
+
+__all__ = [
+    "forward",
+    "decode_step",
+    "init_params",
+    "init_cache",
+    "param_specs",
+    "param_shardings",
+    "cache_template",
+    "cache_shardings",
+    "model_template",
+    "ShardingRules",
+    "NO_SHARDING",
+]

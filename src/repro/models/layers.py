@@ -1,0 +1,310 @@
+"""Core transformer layers: norms, RoPE, blockwise attention, FFN.
+
+Attention is implemented blockwise in pure XLA (flash-style online softmax,
+python loop over static query chunks + lax.scan over KV blocks) so that 32k
+prefill never materializes a (T, T) score matrix — this is the dry-run /
+CPU path; the Pallas flash kernel (kernels/flash_attention.py) is the
+real-TPU option behind ``attention_impl``.
+
+GQA is computed in full query-head space (KV repeated to Hq) so every
+attention einsum carries one explicit head dim that the GSPMD partitioner
+shards cleanly (models/sharding.py); the repeat is sharded too, so its
+memory cost is q-sized per shard.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import ShardingRules
+
+COMPUTE_DTYPE = jnp.bfloat16
+NEG_INF = -2.0 ** 30
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (T,) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    angles = positions.astype(jnp.float32)[:, None] * freqs  # (T, half)
+    cos = cos_b = jnp.cos(angles)[None, :, None, :]  # (1, T, 1, half)
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos_b + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _softcap(s: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return s
+    return jnp.tanh(s / cap) * cap
+
+
+def repeat_kv(k: jax.Array, group: int) -> jax.Array:
+    """(B, T, Hkv, hd) -> (B, T, Hq, hd)."""
+    if group == 1:
+        return k
+    return jnp.repeat(k, group, axis=2)
+
+
+# --------------------------------------------------------------------------
+# blockwise attention (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: Optional[int],
+                        softcap: Optional[float], q_chunk: int = 1024,
+                        k_block: int = 1024) -> jax.Array:
+    """q/k/v: (B, T, H, hd), same H (KV pre-repeated) -> (B, Tq, H, hd).
+
+    Static python loop over query chunks — each chunk's KV extent is static,
+    so causal/window block skipping is free (compiled FLOPs ~= true masked
+    FLOPs). lax.scan + online softmax over KV blocks bounds peak memory to a
+    (B, H, q_chunk, k_block) score tile.
+    """
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, tq)
+    k_block = min(k_block, tk)
+
+    out_chunks = []
+    n_chunks = -(-tq // q_chunk)
+    for ci in range(n_chunks):
+        s_q = ci * q_chunk
+        e_q = min(s_q + q_chunk, tq)
+        cq = e_q - s_q
+        kv_end = tk if not causal else min(tk, e_q)
+        kv_start = 0
+        if window is not None:
+            kv_start = (max(0, s_q - window + 1) // k_block) * k_block
+        nb = max(-(-(kv_end - kv_start) // k_block), 1)
+
+        qc = q[:, s_q:e_q].astype(jnp.float32) * scale  # (B,cq,H,hd)
+        end = min(kv_start + nb * k_block, tk)
+        k_sl = k[:, kv_start:end]
+        v_sl = v[:, kv_start:end]
+        pad = nb * k_block - k_sl.shape[1]
+        if pad:
+            k_sl = jnp.pad(k_sl, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_sl = jnp.pad(v_sl, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kb = k_sl.reshape(b, nb, k_block, h, hd).transpose(1, 0, 2, 3, 4)
+        vb = v_sl.reshape(b, nb, k_block, h, hd).transpose(1, 0, 2, 3, 4)
+
+        qpos = s_q + jnp.arange(cq, dtype=jnp.int32)
+
+        def body(carry, blk):
+            m_prev, l_prev, acc = carry
+            kblk, vblk, bi = blk  # (B,k_block,H,hd) x2, ()
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qc, kblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            s = _softcap(s, softcap)
+            kpos = kv_start + bi * k_block + jnp.arange(k_block, dtype=jnp.int32)
+            mask = jnp.ones((cq, k_block), jnp.bool_)
+            mask &= kpos[None, :] < tk  # padding
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_cur[..., None])
+            alpha = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_cur, l_cur, acc), None
+
+        init = (
+            jnp.full((b, h, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, cq), jnp.float32),
+            jnp.zeros((b, h, cq, hd), jnp.float32),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            body, init, (kb, vb, jnp.arange(nb, dtype=jnp.int32))
+        )
+        l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+        oc = (acc / l_f[..., None]).transpose(0, 2, 1, 3)  # (B,cq,H,hd)
+        out_chunks.append(oc.astype(q.dtype))
+    return jnp.concatenate(out_chunks, axis=1)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int],
+                     softcap: Optional[float], ring: bool = False) -> jax.Array:
+    """One-token attention against a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, S, H, hd) (KV pre-repeated);
+    pos: () int32 — query's absolute position (cache holds pos' <= pos).
+    ring=True: S == window and slot i holds absolute position
+    pos - ((pos - i) mod S).
+    """
+    b, s, h, hd = k_cache.shape
+    scale = 1.0 / math.sqrt(hd)
+    qs = q.astype(jnp.float32) * scale
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", qs, k_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )  # (B,H,1,S)
+    scores = _softcap(scores, softcap)
+    idx = jnp.arange(s, dtype=jnp.int32)
+    if ring:
+        abs_pos = pos - jnp.mod(pos - idx, s)
+        mask = (abs_pos >= 0) & (abs_pos <= pos)
+        if window is not None:
+            mask &= pos - abs_pos < window
+    else:
+        mask = idx <= pos
+        if window is not None:
+            mask &= pos - idx < window
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhqs,bshd->bqhd", p, v_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention layer (QKV/O + rope + norm)
+# --------------------------------------------------------------------------
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # (B, S, Hkv, hd)
+    v: jax.Array
+
+
+def attn_params_template(cfg: ModelConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    t = {
+        "wq": ((d, hq, hd), "wq"),
+        "wk": ((d, hkv, hd), "wkv"),
+        "wv": ((d, hkv, hd), "wkv"),
+        "wo": ((hq, hd, d), "wo"),
+        "norm": ((d,), "norm"),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ((hq, hd), "norm")
+        t["bk"] = ((hkv, hd), "norm")
+        t["bv"] = ((hkv, hd), "norm")
+    if cfg.qk_norm:
+        t["q_norm"] = ((hd,), "norm")
+        t["k_norm"] = ((hd,), "norm")
+    return t
+
+
+def attention_layer(p, x, cfg: ModelConfig, rules: ShardingRules, *,
+                    window: Optional[int], positions: jax.Array,
+                    cache: Optional[AttnCache] = None,
+                    pos: Optional[jax.Array] = None,
+                    ring: bool = False,
+                    return_cache: bool = False):
+    """Pre-norm attention block. Returns (residual_delta, new_cache|None).
+
+    Prefill/train: cache None -> full-sequence blockwise attention; with
+    return_cache=True the fresh (k, v) are handed back (prefill serving).
+    Decode: cache given, x is (B, 1, d), ``pos`` the absolute position.
+    """
+    group = cfg.num_heads // cfg.num_kv_heads
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("btd,dhk->bthk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("btd,dhk->bthk", h, p["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.causal:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = rules.attn_activations(q, cfg.num_heads)
+
+    new_cache = None
+    if cache is None:
+        kr = rules.attn_kv(repeat_kv(k, group), cfg.num_heads)
+        vr = rules.attn_kv(repeat_kv(v, group), cfg.num_heads)
+        out = blockwise_attention(
+            q, kr, vr, causal=cfg.causal, window=window,
+            softcap=cfg.attn_softcap,
+        )
+        if return_cache:
+            new_cache = AttnCache(k=k, v=v)
+    else:
+        s = cache.k.shape[1]
+        slot = jnp.mod(pos, s) if ring else pos
+        k_c = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0)
+        )
+        v_c = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0)
+        )
+        k_c = rules.kv_cache_constraint(k_c)
+        v_c = rules.kv_cache_constraint(v_c)
+        out = decode_attention(
+            q, repeat_kv(k_c, group), repeat_kv(v_c, group), pos,
+            window=window, softcap=cfg.attn_softcap, ring=ring,
+        )
+        new_cache = AttnCache(k=k_c, v=v_c)
+    out = rules.attn_activations(out, cfg.num_heads)
+    delta = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(out.dtype))
+    return delta, new_cache
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+
+
+def ffn_params_template(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "gelu2":  # plain 2-matrix FFN (hubert)
+        return {
+            "w1": ((d, f), "ffn_in"),
+            "w2": ((f, d), "ffn_out"),
+            "norm": ((d,), "norm"),
+        }
+    return {
+        "w1": ((d, f), "ffn_in"),
+        "w3": ((d, f), "ffn_in"),
+        "w2": ((f, d), "ffn_out"),
+        "norm": ((d,), "norm"),
+    }
+
+
+def ffn_layer(p, x, cfg: ModelConfig, rules: ShardingRules):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if cfg.act == "gelu2":
+        u = jax.nn.gelu(h @ p["w1"].astype(h.dtype))
+        return u @ p["w2"].astype(h.dtype)
+    gate_act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    u = gate_act(h @ p["w1"].astype(h.dtype)) * (h @ p["w3"].astype(h.dtype))
+    return u @ p["w2"].astype(h.dtype)

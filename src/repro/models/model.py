@@ -1,0 +1,405 @@
+"""Model assembly: param templates, init, forward (train/prefill), decode.
+
+The layer stack is organized as the config's repeating ``pattern`` scanned
+over ``pattern_repeats`` (stacked params, lax.scan — compile-time friendly
+for 94-layer models) plus an unstacked ``tail``. Each pattern position may
+be a different layer kind (attn / local / global / rec / ssm / moe).
+
+Caches mirror the same structure; 'local' attention caches are ring buffers
+of the window size when max_len exceeds the window (the long_500k enabler
+for gemma2/recurrentgemma).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    AttnCache,
+    attention_layer,
+    attn_params_template,
+    ffn_layer,
+    ffn_params_template,
+    rms_norm,
+)
+from repro.models.sharding import NO_SHARDING, ShardingRules
+
+COMPUTE_DTYPE = jnp.bfloat16
+MAX_ENCODER_POS = 32_768  # learned positions for encoder-only archs
+
+ATTN_KINDS = ("attn", "local", "global", "moe")
+
+
+# --------------------------------------------------------------------------
+# templates
+# --------------------------------------------------------------------------
+
+
+def layer_template(cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("attn", "local", "global"):
+        return {"attn": attn_params_template(cfg), "ffn": ffn_params_template(cfg)}
+    if kind == "moe":
+        return {"attn": attn_params_template(cfg), "moe": moe_mod.moe_params_template(cfg)}
+    if kind == "rec":
+        return {"rec": rglru_mod.rglru_params_template(cfg), "ffn": ffn_params_template(cfg)}
+    if kind == "ssm":
+        return {"ssm": ssm_mod.ssm_params_template(cfg)}
+    raise ValueError(kind)
+
+
+def model_template(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    t: dict[str, Any] = {
+        "embed": ((cfg.vocab_size, d), "embed"),
+        "final_norm": ((d,), "norm"),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ((d, cfg.vocab_size), "lm_head")
+    if cfg.frontend == "vision":
+        t["frontend_proj"] = ((cfg.frontend_dim, d), "norm")
+    elif cfg.frontend == "audio":
+        t["frontend_proj"] = ((cfg.frontend_dim, d), "norm")
+    if cfg.is_encoder:
+        t["pos_embed"] = ((MAX_ENCODER_POS, d), "norm")
+
+    def stack(template, n):
+        return jax.tree.map(
+            lambda leaf: ((n,) + leaf[0], leaf[1]),
+            template,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple),
+        )
+
+    t["blocks"] = [
+        stack(layer_template(cfg, kind), cfg.pattern_repeats)
+        for kind in cfg.pattern
+    ]
+    t["tail"] = [layer_template(cfg, kind) for kind in cfg.tail]
+    return t
+
+
+def _is_template_leaf(x):
+    return (
+        isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+        and isinstance(x[1], str)
+    )
+
+
+def param_specs(cfg: ModelConfig, rules: ShardingRules, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (for .lower) without allocating anything."""
+    t = model_template(cfg)
+    return jax.tree.map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf[0], dtype),
+        t, is_leaf=_is_template_leaf,
+    )
+
+
+def param_shardings(cfg: ModelConfig, rules: ShardingRules):
+    """PartitionSpec tree matching param_specs. Stacked (pattern) leaves get
+    a leading None for the repeat dim."""
+    t = model_template(cfg)
+    from jax.sharding import PartitionSpec as P
+
+    out: dict[str, Any] = {}
+    for key, sub in t.items():
+        if key == "blocks":
+            out["blocks"] = [
+                jax.tree.map(
+                    lambda leaf: P(None, *rules.spec_for(leaf[1], leaf[0][1:])),
+                    blk, is_leaf=_is_template_leaf,
+                )
+                for blk in sub
+            ]
+        elif key == "tail":
+            out["tail"] = [
+                jax.tree.map(
+                    lambda leaf: rules.spec_for(leaf[1], leaf[0]),
+                    blk, is_leaf=_is_template_leaf,
+                )
+                for blk in sub
+            ]
+        else:
+            out[key] = rules.spec_for(sub[1], sub[0])
+    return out
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array, dtype=jnp.float32):
+    t = model_template(cfg)
+    leaves, treedef = jax.tree.flatten(t, is_leaf=_is_template_leaf)
+    keys = jax.random.split(rng, len(leaves))
+
+    def init_leaf(leaf, key):
+        shape, role = leaf
+        if role == "norm" or len(shape) == 1:
+            return jnp.zeros(shape, dtype)
+        scale = 0.02
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(
+        treedef, [init_leaf(l, k) for l, k in zip(leaves, keys)]
+    )
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if kind == "local" and cfg.window is not None:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def _kind_cache_template(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                         dtype):
+    hd = cfg.resolved_head_dim
+    if kind in ATTN_KINDS:
+        s = _cache_len(cfg, kind, max_len)
+        shp = (batch, s, cfg.num_kv_heads, hd)
+        return AttnCache(
+            k=jax.ShapeDtypeStruct(shp, dtype), v=jax.ShapeDtypeStruct(shp, dtype)
+        )
+    if kind == "rec":
+        w = cfg.lru_width or cfg.d_model
+        return rglru_mod.RGLRUCache(
+            state=jax.ShapeDtypeStruct((batch, w), jnp.float32),
+            conv=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w), dtype),
+        )
+    if kind == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        n_heads = d_in // cfg.ssm_head_dim
+        return ssm_mod.SSMCache(
+            state=jax.ShapeDtypeStruct(
+                (batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+            ),
+            conv_x=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, d_in), dtype),
+            conv_bc=jax.ShapeDtypeStruct(
+                (batch, cfg.conv_width - 1, 2 * cfg.ssm_state), dtype
+            ),
+        )
+    raise ValueError(kind)
+
+
+def cache_template(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=COMPUTE_DTYPE):
+    """ShapeDtypeStruct tree of the decode cache (stacked like params)."""
+    def stack(tmpl, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tmpl
+        )
+
+    return {
+        "blocks": [
+            stack(_kind_cache_template(cfg, kind, batch, max_len, dtype),
+                  cfg.pattern_repeats)
+            for kind in cfg.pattern
+        ],
+        "tail": [
+            _kind_cache_template(cfg, kind, batch, max_len, dtype)
+            for kind in cfg.tail
+        ],
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=COMPUTE_DTYPE):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_template(cfg, batch, max_len, dtype)
+    )
+
+
+def cache_shardings(cfg: ModelConfig, rules: ShardingRules, batch: int,
+                    max_len: int, *, long_context: bool = False):
+    from jax.sharding import PartitionSpec as P
+
+    def kind_spec(kind, stacked: bool):
+        lead = (None,) if stacked else ()
+        if kind in ATTN_KINDS:
+            kv = rules.kv_cache_spec(batch, cfg.num_kv_heads,
+                                     long_context=long_context)
+            return AttnCache(k=P(*lead, *kv), v=P(*lead, *kv))
+        if kind == "rec":
+            w_tp = rules._tp_if((cfg.lru_width or cfg.d_model))
+            return rglru_mod.RGLRUCache(
+                state=P(*lead, rules.dp if not long_context else None, w_tp),
+                conv=P(*lead, rules.dp if not long_context else None, None, w_tp),
+            )
+        if kind == "ssm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            n_heads = d_in // cfg.ssm_head_dim
+            h_tp = rules._tp_if(n_heads)
+            dp = rules.dp if not long_context else None
+            return ssm_mod.SSMCache(
+                state=P(*lead, dp, h_tp, None, None),
+                conv_x=P(*lead, dp, None, rules._tp_if(d_in)),
+                conv_bc=P(*lead, dp, None, None),
+            )
+        raise ValueError(kind)
+
+    return {
+        "blocks": [kind_spec(kind, True) for kind in cfg.pattern],
+        "tail": [kind_spec(kind, False) for kind in cfg.tail],
+    }
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+
+
+def apply_layer(kind: str, p, x, cfg: ModelConfig, rules: ShardingRules, *,
+                positions, mesh=None, cache=None, pos=None, max_len=None,
+                return_cache: bool = False):
+    """One block of the given kind. Returns (x, new_cache)."""
+    window = cfg.window if kind == "local" else None
+    if kind in ATTN_KINDS:
+        ring = (
+            kind == "local" and cfg.window is not None and max_len is not None
+            and max_len > cfg.window
+        )
+        delta, new_c = attention_layer(
+            p["attn"], x, cfg, rules, window=window, positions=positions,
+            cache=cache, pos=pos, ring=ring, return_cache=return_cache,
+        )
+        x = rules.residual(x + delta)
+        if kind == "moe":
+            x = rules.residual(x + moe_mod.moe_layer(p["moe"], x, cfg, rules, mesh=mesh))
+        else:
+            x = rules.residual(x + ffn_layer(p["ffn"], x, cfg, rules))
+        return x, new_c
+    if kind == "rec":
+        delta, new_c = rglru_mod.rglru_layer(
+            p["rec"], x, cfg, rules, cache=cache, return_cache=return_cache
+        )
+        x = rules.residual(x + delta)
+        x = rules.residual(x + ffn_layer(p["ffn"], x, cfg, rules))
+        return x, new_c
+    if kind == "ssm":
+        delta, new_c = ssm_mod.ssm_layer(
+            p["ssm"], x, cfg, rules, cache=cache, return_cache=return_cache
+        )
+        x = rules.residual(x + delta)
+        return x, new_c
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+
+def embed_inputs(params, batch: dict, cfg: ModelConfig, rules: ShardingRules):
+    """batch: {'tokens': (B,T) int32, optional 'patches'/'frames'}.
+    Returns (x (B,T,d) compute-dtype, positions (T,))."""
+    emb = params["embed"]
+    if cfg.frontend == "audio":
+        frames = batch["frames"]  # (B, T, frontend_dim)
+        x = frames.astype(COMPUTE_DTYPE) @ params["frontend_proj"].astype(COMPUTE_DTYPE)
+        t = x.shape[1]
+        x = x + params["pos_embed"][:t].astype(COMPUTE_DTYPE)[None] if cfg.is_encoder else x
+        return x, jnp.arange(t, dtype=jnp.int32)
+    tokens = batch["tokens"]
+    x = emb[tokens].astype(COMPUTE_DTYPE)
+    if cfg.frontend == "vision" and "patches" in batch:
+        patches = batch["patches"]  # (B, P, frontend_dim)
+        pe = patches.astype(COMPUTE_DTYPE) @ params["frontend_proj"].astype(COMPUTE_DTYPE)
+        npatch = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, npatch:]], axis=1)
+    t = x.shape[1]
+    return x, jnp.arange(t, dtype=jnp.int32)
+
+
+def lm_logits(params, x, cfg: ModelConfig, rules: ShardingRules):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.final_softcap is not None:
+        logits = (jnp.tanh(logits.astype(jnp.float32) / cfg.final_softcap)
+                  * cfg.final_softcap).astype(logits.dtype)
+    return rules.logits(logits)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill) and decode
+# --------------------------------------------------------------------------
+
+
+def forward(params, batch: dict, cfg: ModelConfig, rules: ShardingRules, *,
+            mesh=None, return_caches: bool = False, max_len: int | None = None,
+            remat: bool = True):
+    """Full-sequence forward. Returns (logits, caches|None)."""
+    x, positions = embed_inputs(params, batch, cfg, rules)
+    x = rules.residual(x)
+    max_len = max_len or x.shape[1]
+
+    def block_step(x, block_params):
+        caches = []
+        for pos_i, kind in enumerate(cfg.pattern):
+            x, c = apply_layer(
+                kind, block_params[pos_i], x, cfg, rules, positions=positions,
+                mesh=mesh, max_len=max_len, return_cache=return_caches,
+            )
+            caches.append(c)
+        return x, tuple(caches)
+
+    step = jax.checkpoint(block_step) if remat else block_step
+    x, stacked_caches = jax.lax.scan(step, x, tuple(params["blocks"]))
+
+    tail_caches = []
+    for blk_params, kind in zip(params["tail"], cfg.tail):
+        x, c = apply_layer(
+            kind, blk_params, x, cfg, rules, positions=positions, mesh=mesh,
+            max_len=max_len, return_cache=return_caches,
+        )
+        tail_caches.append(c)
+
+    logits = lm_logits(params, x, cfg, rules)
+    caches = None
+    if return_caches:
+        caches = {"blocks": list(stacked_caches), "tail": tail_caches}
+    return logits, caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig,
+                rules: ShardingRules, *, mesh=None, max_len: int):
+    """One decode step. tokens: (B, 1); pos: () int32 absolute position.
+    Returns (logits (B, 1, V), new caches)."""
+    x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    positions = pos[None] if pos.ndim == 0 else pos
+    x = rules.constraint(x, jax.sharding.PartitionSpec(rules.dp, None, None)) \
+        if rules.enabled else x
+
+    def block_step(x, xs):
+        block_params, block_caches = xs
+        new_caches = []
+        for pos_i, kind in enumerate(cfg.pattern):
+            x, c = apply_layer(
+                kind, block_params[pos_i], x, cfg, rules, positions=positions,
+                mesh=mesh, cache=block_caches[pos_i], pos=pos, max_len=max_len,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_stacked = jax.lax.scan(
+        block_step, x, (tuple(params["blocks"]), tuple(caches["blocks"]))
+    )
+
+    new_tail = []
+    for blk_params, kind, c in zip(params["tail"], cfg.tail, caches["tail"]):
+        x, nc = apply_layer(
+            kind, blk_params, x, cfg, rules, positions=positions, mesh=mesh,
+            cache=c, pos=pos, max_len=max_len,
+        )
+        new_tail.append(nc)
+
+    logits = lm_logits(params, x, cfg, rules)
+    return logits, {"blocks": list(new_stacked), "tail": new_tail}

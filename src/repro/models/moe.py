@@ -1,0 +1,203 @@
+"""Mixture-of-Experts block: the paper's two-phase SpGEMM discipline applied
+to token->expert dispatch (DESIGN.md §4).
+
+The dispatch matrix (tokens x experts, top-k one-hot) is a sparse matrix in
+CSR spirit: per-expert counts are its row pointers. We split the layer into
+
+  * symbolic phase  — routing: top-k expert ids + in-expert positions via a
+    cumulative one-hot (counts only, no FLOPs on activations — exactly the
+    paper's symbolic contract; capacity plays the role of the memory pool's
+    CHUNKSIZE bound, with overflowing tokens dropped);
+  * numeric phase   — gather tokens into (E_local, C, d) expert buffers and
+    run the expert FFNs as one batched einsum per matrix (dense-block
+    accumulation on the MXU), then scatter-combine weighted by router probs.
+
+Distribution: expert parallelism over the 'model' axis via shard_map —
+each model shard owns E/tp experts and computes their contribution for all
+of its data-shard's tokens; the combine is a single psum over 'model'.
+Token activations stay sharded over ('pod','data') throughout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.sharding import ShardingRules
+
+
+def moe_params_template(cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    return {
+        "router": ((d, e), "norm"),
+        "w1": ((e, d, f), "moe"),
+        "w3": ((e, d, f), "moe"),
+        "w2": ((e, f, d), "moe"),
+        "norm": ((d,), "norm"),
+    }
+
+
+def routing_symbolic(logits: jax.Array, k: int, capacity: int,
+                     num_experts: int):
+    """Symbolic phase: (weights, expert_ids, slot_pos, keep_mask).
+
+    logits: (T, E). slot_pos[t, j] = position of assignment j of token t
+    inside its expert's capacity buffer; keep = slot_pos < capacity (the
+    CHUNKSIZE bound — overflow drops, mirroring pool exhaustion).
+
+    Positions come from the sort-based structure discovery the core SpGEMM
+    path uses (argsort by expert, rank within group) — O(T*k) memory, no
+    (T*k, E) one-hot materialization.
+    """
+    t = logits.shape[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)  # (T, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    flat_ids = ids.reshape(-1)  # (T*k,) — assignment stream
+    n = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    counts = jnp.zeros((num_experts,), jnp.int32).at[sorted_ids].add(
+        1, mode="drop", indices_are_sorted=True
+    )
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+    )
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_ids]
+    slot = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    keep = slot < capacity
+    return weights, ids, slot.reshape(t, k), keep.reshape(t, k)
+
+
+def moe_ffn_local(x, router_w, w1, w3, w2, *, k: int, capacity: int,
+                  num_experts: int, e_start, act):
+    """Numeric phase for one model shard owning experts
+    [e_start, e_start + E_local). x: (T, d) local tokens (full d)."""
+    t, d = x.shape
+    e_local = w1.shape[0]
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # (T, E)
+    weights, ids, slot, keep = routing_symbolic(logits, k, capacity, num_experts)
+
+    local = (ids >= e_start) & (ids < e_start + e_local) & keep  # (T, k)
+    local_e = jnp.where(local, ids - e_start, 0)
+    local_slot = jnp.where(local, slot, capacity)  # capacity slot == dropped
+
+    # gather: scatter token rows into (E_local, capacity+1, d); slot
+    # 'capacity' is the drop bin. One scatter per top-k slot keeps the
+    # largest temporary at (T, d) — never (T*k, d).
+    buf = jnp.zeros((e_local, capacity + 1, d), x.dtype)
+    for j in range(k):
+        buf = buf.at[local_e[:, j], local_slot[:, j]].add(
+            jnp.where(local[:, j][:, None], x, 0), mode="drop"
+        )
+    xe = buf[:, :capacity]  # (E_local, C, d)
+
+    # expert FFNs: batched dense-block matmuls (MXU-native numeric phase)
+    gate_act = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = gate_act(jnp.einsum("ecd,edf->ecf", xe, w1.astype(xe.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w3.astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, w2.astype(xe.dtype))  # (E_local, C, d)
+
+    # combine: gather each assignment's output row, weight, sum over k
+    ye_pad = jnp.concatenate([ye, jnp.zeros((e_local, 1, d), ye.dtype)], axis=1)
+    out = jnp.zeros((t, d), ye.dtype)
+    for j in range(k):
+        rows = ye_pad[local_e[:, j], local_slot[:, j]]  # (T, d)
+        rows = rows * weights[:, j][:, None].astype(rows.dtype)
+        out = out + jnp.where(local[:, j][:, None], rows, 0)
+    return out
+
+
+def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules,
+              mesh=None, capacity_factor: float = 1.25):
+    """Full MoE block: norm -> EP-sharded expert FFN -> residual delta.
+
+    x: (B, T, d). With a mesh + tp axis: shard_map over the full mesh,
+    experts split over 'model', tokens over ('pod','data'); one psum('model')
+    combines expert contributions. Without a mesh (smoke tests): single-shard
+    fast path.
+    """
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    b, t, d = h.shape
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+
+    def capacity_for(tokens: int, e_local: int) -> int:
+        cap = int(tokens * k / e * capacity_factor) + 1
+        return max(-(-cap // 8) * 8, 8)
+
+    if mesh is None or not rules.enabled or rules.tp_axis is None:
+        cap = capacity_for(b * t, e)
+        y = moe_ffn_local(
+            h.reshape(b * t, d), p["router"], p["w1"], p["w3"], p["w2"],
+            k=k, capacity=cap, num_experts=e, e_start=0, act=cfg.act,
+        )
+        return y.reshape(b, t, d)
+
+    tp = rules.tp_axis
+    dp = rules.dp_axes
+    tp_size = rules.tp_size
+    e_local = e // tp_size
+    dp_size = 1
+    for ax in dp:
+        dp_size *= mesh.shape[ax]
+    tokens_local = (b // dp_size) * t
+    cap = capacity_for(tokens_local, e_local)
+    # FSDP on expert weights (§Perf iteration for the 235B arch): at rest
+    # each chip holds E/tp experts' (d/dp)-slice; the full (bf16) expert
+    # block is all-gathered over the data axes per layer. The all_gather
+    # transpose gives reduce-scattered (ZeRO-2 style) expert grads for free.
+    dp_flat = dp if len(dp) > 1 else dp[0]
+    fsdp = (d % dp_size == 0) and (cfg.moe_d_ff % dp_size == 0) and dp_size > 1
+    w_spec = P(tp, dp_flat, None) if fsdp else P(tp)
+    # sequence-parallel boundary (§Perf iteration 2 for qwen3-235b): tokens
+    # arrive seq-sharded over 'model', all-gather in, psum_scatter out —
+    # halves the MoE collective bytes vs replicated-in + full psum.
+    sp = t % tp_size == 0 and tp_size > 1
+    h_spec = P(dp, tp if sp else None, None)
+
+    def shard_fn(h_sh, router_w, w1, w3, w2):
+        # h_sh: (B_loc, T[/tp], d); w1/w3: (E_local, d[/dp], f)
+        tp_idx = jax.lax.axis_index(tp)
+        e_start = tp_idx * e_local
+        if fsdp:
+            w1 = _fsdp_gather(w1, dp, axis=1)
+            w3 = _fsdp_gather(w3, dp, axis=1)
+            w2 = _fsdp_gather(w2, dp, axis=1)
+        if sp:
+            h_full = jax.lax.all_gather(h_sh, tp, axis=1, tiled=True)
+        else:
+            h_full = h_sh
+        y = moe_ffn_local(
+            h_full.reshape(-1, d), router_w, w1, w3, w2,
+            k=k, capacity=cap, num_experts=e, e_start=e_start, act=cfg.act,
+        )
+        y = y.reshape(h_full.shape)
+        if sp:
+            return jax.lax.psum_scatter(y, tp, scatter_dimension=1, tiled=True)
+        return jax.lax.psum(y, tp)
+
+    y = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(
+            h_spec,
+            P(),  # router replicated
+            w_spec, w_spec,  # experts: EP (x FSDP at rest)
+            w_spec,
+        ),
+        out_specs=h_spec,
+    )(h, p["router"], p["w1"], p["w3"], p["w2"])
+    return y
+
+
+def _fsdp_gather(w, dp_axes: tuple, axis: int):
+    """All-gather an FSDP-sharded weight over the data axes, in bf16."""
+    out = w.astype(jnp.bfloat16)
+    for ax in reversed(dp_axes):
+        out = jax.lax.all_gather(out, ax, axis=axis, tiled=True)
+    return out

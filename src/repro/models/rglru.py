@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(c * log(sigmoid(L)) * r_t),  r/i = input-dependent gates.
+
+Training uses an associative scan over T (log-depth); decode is the O(1)
+per-token update that makes the long_500k cell tractable for this arch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.sharding import ShardingRules
+
+LRU_C = 8.0  # Griffin's fixed exponent scale
+
+
+class RGLRUCache(NamedTuple):
+    state: jax.Array  # (B, W) f32
+    conv: jax.Array  # (B, conv_w - 1, W)
+
+
+def rglru_params_template(cfg: ModelConfig):
+    """Gates are block-diagonal over heads (as in the DeepMind Griffin
+    implementation) — (H, W/H, W/H) blocks keep the recurrence width fully
+    head-sharded: no cross-shard mixing inside the RG-LRU."""
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    nh = cfg.num_heads
+    bw = w // nh
+    return {
+        "proj_x": ((d, w), "ffn_in"),
+        "proj_gate": ((d, w), "ffn_in"),
+        "conv_w": ((cfg.conv_width, w), "conv_ch"),
+        "conv_b": ((w,), "conv_ch1"),
+        "gate_a_w": ((nh, bw, bw), "gate_block"),
+        "gate_a_b": ((w,), "conv_ch1"),
+        "gate_i_w": ((nh, bw, bw), "gate_block"),
+        "gate_i_b": ((w,), "conv_ch1"),
+        "lam": ((w,), "conv_ch1"),
+        "proj_out": ((w, d), "ffn_out"),
+        "norm": ((d,), "norm"),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _gates(p, xs):
+    """r, i gates in f32 via block-diagonal (per-head) weights.
+
+    xs: (B, T, W) -> reshaped (B, T, H, W/H)."""
+    nh, bw, _ = p["gate_a_w"].shape
+    b, t, w = xs.shape
+    xf = xs.astype(jnp.float32).reshape(b, t, nh, bw)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bthw,hwv->bthv", xf, p["gate_a_w"].astype(jnp.float32))
+        .reshape(b, t, w) + p["gate_a_b"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bthw,hwv->bthv", xf, p["gate_i_w"].astype(jnp.float32))
+        .reshape(b, t, w) + p["gate_i_b"].astype(jnp.float32)
+    )
+    log_a0 = -jax.nn.softplus(-p["lam"].astype(jnp.float32))  # log sigmoid(L)
+    log_a = LRU_C * log_a0[None, None, :] * r  # (B, T, W)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * i * xs.astype(jnp.float32)
+
+
+def rglru_layer(p, x, cfg: ModelConfig, rules: ShardingRules, *,
+                cache: RGLRUCache | None = None, return_cache: bool = False):
+    """Pre-norm recurrent block. x: (B, T, d). Returns (delta, cache|None)."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xs = h @ p["proj_x"].astype(h.dtype)  # (B, T, W)
+    gate = h @ p["proj_gate"].astype(h.dtype)
+    if rules.enabled and rules.tp_axis and cache is None:
+        from jax.sharding import PartitionSpec as P
+
+        w = xs.shape[-1]
+        tp_w = rules._tp_if(w)
+        xs = rules.constraint(xs, P(rules.dp, None, tp_w))
+        gate = rules.constraint(gate, P(rules.dp, None, tp_w))
+
+    new_cache = None
+    if cache is None:
+        xs_c = _causal_conv(xs, p["conv_w"].astype(xs.dtype),
+                            p["conv_b"].astype(xs.dtype))
+        a, b_term = _gates(p, xs_c)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hseq = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+        y = hseq
+        if return_cache:
+            new_cache = RGLRUCache(
+                state=hseq[:, -1], conv=xs[:, -(p["conv_w"].shape[0] - 1):]
+            )
+    else:
+        window = jnp.concatenate([cache.conv, xs], axis=1)
+        xs_c = (
+            jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32))
+            + p["conv_b"].astype(jnp.float32)
+        )[:, None, :].astype(xs.dtype)
+        a, b_term = _gates(p, xs_c)  # (B, 1, W)
+        s = cache.state * a[:, 0] + b_term[:, 0]
+        y = s[:, None, :]
+        new_cache = RGLRUCache(state=s, conv=window[:, 1:])
+
+    y = y.astype(x.dtype) * jax.nn.gelu(gate)
+    delta = y @ p["proj_out"].astype(y.dtype)
+    return delta, new_cache

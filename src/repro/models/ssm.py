@@ -1,0 +1,208 @@
+"""Mamba2 block: SSD (state-space duality) with chunked scan.
+
+Faithful to arXiv:2405.21060's minimal SSD: within-chunk attention-like
+block (decay-masked) + across-chunk state recurrence, expressed as a
+lax.scan over chunks so peak memory is one (B, H, Q, Q) decay block.
+Decode is the O(1) state update — the reason mamba2 runs the long_500k cell.
+
+Projections are kept separate per component (z / x / BC / dt) so each can
+carry its own TP sharding (heads over 'model'; BC replicated — it is shared
+across heads, G=1) with no sharded-dim slicing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.sharding import ShardingRules
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array  # (B, H, P, N) f32
+    conv_x: jax.Array  # (B, conv_w - 1, d_in)
+    conv_bc: jax.Array  # (B, conv_w - 1, 2N)
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads
+
+
+def ssm_params_template(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, n_heads = _dims(cfg)
+    n = cfg.ssm_state
+    k = cfg.conv_width
+    return {
+        "in_z": ((d, d_in), "ffn_in"),
+        "in_x": ((d, d_in), "ffn_in"),
+        "in_bc": ((d, 2 * n), "norm"),
+        "in_dt": ((d, n_heads), "norm"),
+        "conv_x_w": ((k, d_in), "conv_ch"),
+        "conv_x_b": ((d_in,), "conv_ch1"),
+        "conv_bc_w": ((k, 2 * n), "norm"),
+        "conv_bc_b": ((2 * n,), "norm"),
+        "a_log": ((n_heads,), "norm"),
+        "d_skip": ((n_heads,), "norm"),
+        "dt_bias": ((n_heads,), "norm"),
+        "gate_norm": ((d_in,), "conv_ch1"),
+        "out_proj": ((d_in, d), "ffn_out"),
+        "norm": ((d,), "norm"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, T, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _conv_step(window, w, b):
+    """window: (B, K, C) -> (B, 1, C)."""
+    out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32)
+    ) + b.astype(jnp.float32)
+    return out[:, None, :]
+
+
+def ssm_layer(p, x, cfg: ModelConfig, rules: ShardingRules, *,
+              cache: SSMCache | None = None, return_cache: bool = False):
+    """Pre-norm Mamba2 block. x: (B, T, d). Returns (delta, new_cache|None).
+
+    cache given => decode (T == 1, O(1) state update). return_cache on the
+    full-sequence path hands back the final state (prefill -> decode).
+    """
+    d_in, n_heads = _dims(cfg)
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    b_sz, t, _ = x.shape
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z = h @ p["in_z"].astype(h.dtype)  # (B, T, d_in) gate branch
+    xs = h @ p["in_x"].astype(h.dtype)  # (B, T, d_in)
+    bc = h @ p["in_bc"].astype(h.dtype)  # (B, T, 2N)
+    dt_raw = h @ p["in_dt"].astype(h.dtype)  # (B, T, H)
+    # Pin head-TP on the SSD internals (§Perf: GSPMD otherwise propagates
+    # the residual's seq-sharding and runs the whole SSD model-replicated).
+    if rules.enabled and rules.tp_axis and not rules.decode:
+        from jax.sharding import PartitionSpec as P
+
+        tp_d = rules._tp_if(d_in)
+        tp_h = rules._tp_if(n_heads)
+        z = rules.constraint(z, P(rules.dp, None, tp_d))
+        xs = rules.constraint(xs, P(rules.dp, None, tp_d))
+        bc = rules.constraint(bc, P(rules.dp, None, None))
+        dt_raw = rules.constraint(dt_raw, P(rules.dp, None, tp_h))
+
+    new_cache = None
+    if cache is None:
+        xs_c = _causal_conv(xs, p["conv_x_w"].astype(xs.dtype),
+                            p["conv_x_b"].astype(xs.dtype))
+        bc_c = _causal_conv(bc, p["conv_bc_w"].astype(bc.dtype),
+                            p["conv_bc_b"].astype(bc.dtype))
+    else:
+        win_x = jnp.concatenate([cache.conv_x, xs], axis=1)
+        win_bc = jnp.concatenate([cache.conv_bc, bc], axis=1)
+        xs_c = _conv_step(win_x, p["conv_x_w"], p["conv_x_b"]).astype(xs.dtype)
+        bc_c = _conv_step(win_bc, p["conv_bc_w"], p["conv_bc_b"]).astype(bc.dtype)
+    xs_c = jax.nn.silu(xs_c)
+    bc_c = jax.nn.silu(bc_c)
+    b_in, c_out = jnp.split(bc_c, [n], axis=-1)  # (B, T, N) each
+    xh = xs_c.reshape(b_sz, t, n_heads, hd)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, T, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    da = dt * a[None, None, :]  # (B, T, H) — log-decay per step
+    dx = xh.astype(jnp.float32) * dt[..., None]  # dt-scaled input
+
+    if cache is None:
+        if rules.enabled and rules.tp_axis and not rules.decode:
+            from jax.sharding import PartitionSpec as P
+
+            tp_h = rules._tp_if(n_heads)
+            dx = rules.constraint(dx, P(rules.dp, None, tp_h, None))
+            da = rules.constraint(da, P(rules.dp, None, tp_h))
+        y, final_state = _ssd_chunked(
+            dx, da, b_in.astype(jnp.float32), c_out.astype(jnp.float32),
+            chunk=min(cfg.ssm_chunk, t),
+        )
+        if return_cache:
+            kw = cfg.conv_width - 1
+            new_cache = SSMCache(
+                state=final_state, conv_x=xs[:, -kw:], conv_bc=bc[:, -kw:]
+            )
+    else:
+        # decode: S = exp(da) * S + dx (x) b ;  y = C . S
+        s = cache.state  # (B, H, P, N)
+        decay = jnp.exp(da[:, 0])  # (B, H)
+        s = s * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", dx[:, 0], b_in[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", s, c_out[:, 0].astype(jnp.float32))
+        y = y[:, None]  # (B, 1, H, P)
+        new_cache = SSMCache(state=s, conv_x=win_x[:, 1:], conv_bc=win_bc[:, 1:])
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b_sz, t, d_in)
+    # gated RMSNorm then out projection
+    y = rms_norm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    delta = y @ p["out_proj"].astype(y.dtype)
+    return delta, new_cache
+
+
+def _ssd_chunked(dx, da, b_in, c_out, chunk: int):
+    """Minimal SSD: dx (B,T,H,P), da (B,T,H), b/c (B,T,N).
+
+    Returns (y (B,T,H,P) f32, final state (B,H,P,N)).
+    """
+    b_sz, t, n_heads, hd = dx.shape
+    n = b_in.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        dx = jnp.pad(dx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_out = jnp.pad(c_out, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nc = tp // chunk
+    dxc = dx.reshape(b_sz, nc, chunk, n_heads, hd).transpose(1, 0, 2, 3, 4)
+    dac = da.reshape(b_sz, nc, chunk, n_heads).transpose(1, 0, 2, 3)
+    bc = b_in.reshape(b_sz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_out.reshape(b_sz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def step(state, inp):
+        dxq, daq, bq, cq = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        da_cs = jnp.cumsum(daq, axis=1)  # (B,Q,H)
+        # intra-chunk: L[l,s] = exp(da_cs[l] - da_cs[s]) for l >= s
+        ldiff = da_cs[:, :, None, :] - da_cs[:, None, :, :]  # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+        scores = jnp.einsum("bln,bsn->bls", cq, bq)  # (B,Q,Q)
+        y_diag = jnp.einsum("bls,blsh,bshp->blhp", scores, l_mat, dxq)
+        # contribution of incoming state
+        state_decay = jnp.exp(da_cs)  # (B,Q,H)
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", cq, state, state_decay)
+        # update state
+        chunk_decay = jnp.exp(da_cs[:, -1, :])  # (B,H)
+        in_decay = jnp.exp(da_cs[:, -1:, :] - da_cs)  # (B,Q,H)
+        state = state * chunk_decay[:, :, None, None] + jnp.einsum(
+            "bsn,bsh,bshp->bhpn", bq, in_decay, dxq
+        )
+        return state, y_diag + y_off
+
+    state0 = jnp.zeros((b_sz, n_heads, hd, n), jnp.float32)
+    final_state, ys = jax.lax.scan(step, state0, (dxc, dac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b_sz, tp, n_heads, hd)
+    return y[:, :t], final_state

@@ -1,0 +1,3 @@
+from repro.runtime.watchdog import Heartbeat, StepWatchdog
+
+__all__ = ["StepWatchdog", "Heartbeat"]

@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, prefill_to_cache
+
+__all__ = ["ServeEngine", "prefill_to_cache"]

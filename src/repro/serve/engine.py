@@ -1,0 +1,110 @@
+"""Serving engine: batched prefill -> decode with static-shape caches.
+
+The prefill->decode cache handoff pads full-length prefill KV into the
+max_len decode buffers (ring-compacting 'local' layers to their window).
+A minimal continuous-batching engine for the examples; the dry-run lowers
+prefill/decode steps directly via launch/cells.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward, init_cache
+from repro.models.layers import AttnCache
+from repro.models.model import _cache_len  # noqa: PLC2701 (intra-package)
+from repro.models.sharding import NO_SHARDING, ShardingRules
+
+
+def _pad_attn_cache(prefill_c: AttnCache, kind: str, cfg: ModelConfig,
+                    t: int, max_len: int, stacked: bool) -> AttnCache:
+    """Place (B, T, Hkv, hd) prefill KV into the (B, S, Hkv, hd) decode
+    buffer. Local layers keep the last `window` positions at ring slots
+    consistent with absolute positions."""
+    s = _cache_len(cfg, kind, max_len)
+    k, v = prefill_c.k, prefill_c.v
+    t_axis = 2 if stacked else 1
+
+    def place(x):
+        if s >= x.shape[t_axis]:
+            pad = [(0, 0)] * x.ndim
+            pad[t_axis] = (0, s - x.shape[t_axis])
+            return jnp.pad(x, pad)
+        # ring: keep last s positions; absolute position p -> slot p % s
+        start = x.shape[t_axis] - s
+        sl = jax.lax.slice_in_dim(x, start, x.shape[t_axis], axis=t_axis)
+        shift = start % s  # slot of absolute position `start`
+        return jnp.roll(sl, shift, axis=t_axis)
+
+    return AttnCache(k=place(k), v=place(v))
+
+
+def prefill_to_cache(prefill_caches, cfg: ModelConfig, t: int, max_len: int):
+    """Convert forward(return_caches=True) output into decode buffers."""
+    out_blocks = []
+    for kind, c in zip(cfg.pattern, prefill_caches["blocks"]):
+        if isinstance(c, AttnCache):
+            out_blocks.append(_pad_attn_cache(c, kind, cfg, t, max_len, True))
+        else:
+            out_blocks.append(c)  # ssm / rec states are already final
+    out_tail = []
+    for kind, c in zip(cfg.tail, prefill_caches["tail"]):
+        if isinstance(c, AttnCache):
+            out_tail.append(_pad_attn_cache(c, kind, cfg, t, max_len, False))
+        else:
+            out_tail.append(c)
+    return {"blocks": out_blocks, "tail": out_tail}
+
+
+class ServeEngine:
+    """Minimal batched serving: prefill a prompt batch, then greedy decode."""
+
+    def __init__(self, params, cfg: ModelConfig,
+                 rules: Optional[ShardingRules] = None, mesh=None,
+                 max_len: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.rules = rules or NO_SHARDING
+        self.mesh = mesh
+        self.max_len = max_len
+        self._decode = jax.jit(
+            partial(decode_step, cfg=cfg, rules=self.rules, mesh=mesh,
+                    max_len=max_len),
+            donate_argnums=(1,),
+        )
+
+    def prefill(self, tokens: jax.Array):
+        """tokens: (B, T). Returns (last_logits, caches, next_pos)."""
+        t = tokens.shape[1]
+        logits, caches = forward(
+            self.params, {"tokens": tokens}, self.cfg, self.rules,
+            mesh=self.mesh, return_caches=True, remat=False,
+            max_len=self.max_len,
+        )
+        caches = prefill_to_cache(caches, self.cfg, t, self.max_len)
+        return logits[:, -1], caches, t
+
+    def generate(self, prompts: jax.Array, steps: int,
+                 temperature: float = 0.0, rng=None):
+        """Greedy (or sampled) continuation of a (B, T) prompt batch."""
+        last, caches, pos = self.prefill(prompts)
+        outs = []
+        tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+        for i in range(steps):
+            outs.append(tok)
+            logits, caches = self._decode(
+                self.params, caches, tok, jnp.int32(pos + i)
+            )
+            lg = logits[:, 0]
+            if temperature > 0:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, lg / temperature)[:, None]
+                tok = tok.astype(jnp.int32)
+            else:
+                tok = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,34 @@
+"""Static-shape sparse matrix containers and generators for the SpGEMM framework.
+
+All containers are JAX pytrees with *static* capacity: XLA cannot allocate
+dynamically, so every sparse matrix carries an ``nnz_cap`` >= nnz and a
+padded tail. Validity is derived from ``indptr`` (CSR) or ``row_nnz`` (ELL),
+never from sentinel values, so padded slots may hold any index.
+"""
+from repro.sparse.formats import CSR, ELL, BSR, csr_to_ell, csr_row_ids, ell_to_csr
+from repro.sparse.generators import (
+    random_csr,
+    rmat_csr,
+    banded_csr,
+    stencil2d_csr,
+    aggregation_prolongator,
+    galerkin_triple,
+)
+from repro.sparse.oracle import dense_spgemm_oracle, gustavson_numpy
+
+__all__ = [
+    "CSR",
+    "ELL",
+    "BSR",
+    "csr_to_ell",
+    "ell_to_csr",
+    "csr_row_ids",
+    "random_csr",
+    "rmat_csr",
+    "banded_csr",
+    "stencil2d_csr",
+    "aggregation_prolongator",
+    "galerkin_triple",
+    "dense_spgemm_oracle",
+    "gustavson_numpy",
+]

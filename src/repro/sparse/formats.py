@@ -1,0 +1,247 @@
+"""Sparse matrix containers as static-shape JAX pytrees.
+
+CSR is the framework's interchange format (mirrors the paper's compressed-row
+matrices). ELL is the Pallas-kernel feed format: fixed row width, gatherable
+with static shapes. BSR carries dense (bm, bn) blocks for MXU-friendly block
+SpGEMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["indptr", "indices", "values"],
+    meta_fields=["shape"],
+)
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row matrix with static nnz capacity.
+
+    indptr:  (m+1,) int32 — row pointers; indptr[m] == true nnz <= nnz_cap.
+    indices: (nnz_cap,) int32 — column ids; slots >= indptr[m] are padding.
+    values:  (nnz_cap,) dtype.
+    shape:   (m, k) static python ints.
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    values: jax.Array
+    shape: tuple
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_cap(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def nnz(self) -> jax.Array:
+        """True (dynamic) nnz."""
+        return self.indptr[-1]
+
+    def row_nnz(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def valid_mask(self) -> jax.Array:
+        """(nnz_cap,) bool — True for live entries."""
+        return jnp.arange(self.nnz_cap, dtype=jnp.int32) < self.indptr[-1]
+
+    def to_dense(self) -> jax.Array:
+        """Jittable densification (for oracles/tests; O(m*k) memory)."""
+        rows = csr_row_ids(self.indptr, self.nnz_cap)
+        mask = self.valid_mask()
+        cols = jnp.where(mask, self.indices, 0)
+        vals = jnp.where(mask, self.values, 0)
+        rows = jnp.where(mask, rows, 0)
+        out = jnp.zeros(self.shape, self.values.dtype)
+        return out.at[rows, cols].add(vals)
+
+    @staticmethod
+    def from_dense(x, nnz_cap: int | None = None, index_dtype=jnp.int32) -> "CSR":
+        """Host-side construction from a dense array (numpy path, test helper)."""
+        x = np.asarray(x)
+        m, k = x.shape
+        rows, cols = np.nonzero(x)
+        vals = x[rows, cols]
+        nnz = len(rows)
+        cap = nnz_cap if nnz_cap is not None else max(nnz, 1)
+        if cap < nnz:
+            raise ValueError(f"nnz_cap={cap} < nnz={nnz}")
+        indptr = np.zeros(m + 1, np.int32)
+        np.add.at(indptr[1:], rows, 1)
+        indptr = np.cumsum(indptr).astype(np.int32)
+        indices = np.zeros(cap, np.int32)
+        values = np.zeros(cap, x.dtype)
+        indices[:nnz] = cols
+        values[:nnz] = vals
+        return CSR(
+            indptr=jnp.asarray(indptr),
+            indices=jnp.asarray(indices, index_dtype),
+            values=jnp.asarray(values),
+            shape=(m, k),
+        )
+
+    @staticmethod
+    def from_arrays(indptr, indices, values, shape) -> "CSR":
+        return CSR(
+            indptr=jnp.asarray(indptr, jnp.int32),
+            indices=jnp.asarray(indices, jnp.int32),
+            values=jnp.asarray(values),
+            shape=tuple(shape),
+        )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["indices", "values", "row_nnz"],
+    meta_fields=["shape"],
+)
+@dataclasses.dataclass(frozen=True)
+class ELL:
+    """ELLPACK: every row padded to a fixed width r_pad.
+
+    indices: (m, r_pad) int32 — padded slots hold 0.
+    values:  (m, r_pad) dtype — padded slots hold 0 (so numerics ignore them).
+    row_nnz: (m,) int32 — live width per row.
+    shape:   (m, k).
+    """
+
+    indices: jax.Array
+    values: jax.Array
+    row_nnz: jax.Array
+    shape: tuple
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.shape[1]
+
+    @property
+    def r_pad(self) -> int:
+        return self.indices.shape[1]
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.r_pad, dtype=jnp.int32)[None, :] < self.row_nnz[:, None]
+
+    def to_dense(self) -> jax.Array:
+        mask = self.valid_mask()
+        rows = jnp.broadcast_to(
+            jnp.arange(self.m, dtype=jnp.int32)[:, None], self.indices.shape
+        )
+        out = jnp.zeros(self.shape, self.values.dtype)
+        return out.at[
+            jnp.where(mask, rows, 0), jnp.where(mask, self.indices, 0)
+        ].add(jnp.where(mask, self.values, 0))
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["indptr", "indices", "blocks"],
+    meta_fields=["shape", "block_shape"],
+)
+@dataclasses.dataclass(frozen=True)
+class BSR:
+    """Block CSR: CSR over a coarse (m/bm, k/bn) block graph with dense blocks.
+
+    indptr:  (mb+1,) int32 over block rows.
+    indices: (nnzb_cap,) int32 block-column ids.
+    blocks:  (nnzb_cap, bm, bn) dense blocks.
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    blocks: jax.Array
+    shape: tuple
+    block_shape: tuple
+
+    @property
+    def mb(self) -> int:
+        return self.shape[0] // self.block_shape[0]
+
+    @property
+    def kb(self) -> int:
+        return self.shape[1] // self.block_shape[1]
+
+    def to_dense(self) -> jax.Array:
+        bm, bn = self.block_shape
+        nnzb_cap = self.indices.shape[0]
+        rows = csr_row_ids(self.indptr, nnzb_cap)
+        mask = jnp.arange(nnzb_cap, dtype=jnp.int32) < self.indptr[-1]
+        rows = jnp.where(mask, rows, 0)
+        cols = jnp.where(mask, self.indices, 0)
+        blocks = jnp.where(mask[:, None, None], self.blocks, 0)
+        out = jnp.zeros((self.mb, self.kb, bm, bn), self.blocks.dtype)
+        out = out.at[rows, cols].add(blocks)
+        return out.transpose(0, 2, 1, 3).reshape(self.shape)
+
+
+def csr_row_ids(indptr: jax.Array, nnz_cap: int) -> jax.Array:
+    """(nnz_cap,) row id per CSR slot; padded slots get row m-1+1 clamped.
+
+    Standard trick: scatter 1 at each row start, cumsum. Jittable, O(nnz).
+    """
+    m = indptr.shape[0] - 1
+    marks = jnp.zeros(nnz_cap, jnp.int32).at[indptr[1:]].add(
+        1, mode="drop", indices_are_sorted=True
+    )
+    row = jnp.cumsum(marks)
+    return jnp.minimum(row, m - 1).astype(jnp.int32)
+
+
+def csr_to_ell(a: CSR, r_pad: int | None = None) -> ELL:
+    """Jittable CSR→ELL when r_pad given statically; host decides r_pad."""
+    if r_pad is None:
+        r_pad = int(jnp.max(a.row_nnz()))
+        r_pad = max(r_pad, 1)
+    row_nnz = a.row_nnz()
+    # gather: ell[i, r] = csr[indptr[i] + r] when r < row_nnz[i]
+    base = a.indptr[:-1][:, None] + jnp.arange(r_pad, dtype=jnp.int32)[None, :]
+    mask = jnp.arange(r_pad, dtype=jnp.int32)[None, :] < row_nnz[:, None]
+    flat = jnp.where(mask, base, 0).reshape(-1)
+    idx = jnp.where(mask.reshape(-1), a.indices[jnp.minimum(flat, a.nnz_cap - 1)], 0)
+    val = jnp.where(mask.reshape(-1), a.values[jnp.minimum(flat, a.nnz_cap - 1)], 0)
+    return ELL(
+        indices=idx.reshape(a.m, r_pad).astype(jnp.int32),
+        values=val.reshape(a.m, r_pad),
+        row_nnz=row_nnz.astype(jnp.int32),
+        shape=a.shape,
+    )
+
+
+def ell_to_csr(e: ELL, nnz_cap: int | None = None) -> CSR:
+    """Host-side ELL→CSR (test helper)."""
+    idx = np.asarray(e.indices)
+    val = np.asarray(e.values)
+    rn = np.asarray(e.row_nnz)
+    m = e.m
+    cap = int(nnz_cap if nnz_cap is not None else max(int(rn.sum()), 1))
+    indptr = np.zeros(m + 1, np.int32)
+    indptr[1:] = np.cumsum(rn)
+    indices = np.zeros(cap, np.int32)
+    values = np.zeros(cap, val.dtype)
+    pos = 0
+    for i in range(m):
+        w = int(rn[i])
+        indices[pos : pos + w] = idx[i, :w]
+        values[pos : pos + w] = val[i, :w]
+        pos += w
+    return CSR.from_arrays(indptr, indices, values, e.shape)

@@ -1,0 +1,117 @@
+"""Host-side (numpy) sparse matrix generators mirroring the paper's test suite.
+
+The paper evaluates 83 multiplications: A*A on UF-collection matrices (power-law
+graphs like RMAT/wikipedia, FEM matrices like audikw_1) and R*A*P Galerkin
+triple products from multigrid. We generate structurally comparable synthetic
+stand-ins: RMAT (power-law), banded/stencil (FEM-like), and aggregation-based
+prolongators for triple products.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparse.formats import CSR
+
+
+def _dedupe_coo(rows, cols, vals, m, k):
+    key = rows.astype(np.int64) * k + cols.astype(np.int64)
+    order = np.argsort(key, kind="stable")
+    key, rows, cols, vals = key[order], rows[order], cols[order], vals[order]
+    keep = np.ones(len(key), bool)
+    keep[1:] = key[1:] != key[:-1]
+    # accumulate duplicate values into the kept slot
+    seg = np.cumsum(keep) - 1
+    out_vals = np.zeros(int(keep.sum()), vals.dtype)
+    np.add.at(out_vals, seg, vals)
+    return rows[keep], cols[keep], out_vals
+
+
+def _coo_to_csr(rows, cols, vals, m, k, dtype=np.float32) -> CSR:
+    rows, cols, vals = _dedupe_coo(rows, cols, vals.astype(dtype), m, k)
+    indptr = np.zeros(m + 1, np.int32)
+    np.add.at(indptr[1:], rows, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    return CSR.from_arrays(indptr, cols.astype(np.int32), vals, (m, k))
+
+
+def random_csr(m: int, k: int, avg_nnz_per_row: float, seed: int = 0, dtype=np.float32) -> CSR:
+    """Uniform random sparsity (Erdos-Renyi-like rows)."""
+    rng = np.random.default_rng(seed)
+    nnz = max(int(m * avg_nnz_per_row), 1)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, k, nnz)
+    vals = rng.standard_normal(nnz)
+    return _coo_to_csr(rows, cols, vals, m, k, dtype)
+
+
+def rmat_csr(scale: int, edge_factor: int = 8, seed: int = 0,
+             a: float = 0.57, b: float = 0.19, c: float = 0.19, dtype=np.float32) -> CSR:
+    """RMAT power-law graph (the paper squares RMAT matrices; MAXRS ~ 95% of k)."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    nnz = n * edge_factor
+    rows = np.zeros(nnz, np.int64)
+    cols = np.zeros(nnz, np.int64)
+    for bit in range(scale):
+        r = rng.random(nnz)
+        # quadrant probabilities a, b, c, d
+        row_bit = (r >= a + b).astype(np.int64)
+        col_bit = ((r >= a) & (r < a + b) | (r >= a + b + c)).astype(np.int64)
+        rows |= row_bit << bit
+        cols |= col_bit << bit
+    vals = rng.standard_normal(nnz)
+    return _coo_to_csr(rows, cols, vals, n, n, dtype)
+
+
+def banded_csr(m: int, bandwidth: int, seed: int = 0, dtype=np.float32) -> CSR:
+    """Banded matrix (FEM-like bounded row degree, e.g. audikw_1 family)."""
+    rng = np.random.default_rng(seed)
+    offsets = np.arange(-bandwidth, bandwidth + 1)
+    rows = np.repeat(np.arange(m), len(offsets))
+    cols = rows + np.tile(offsets, m)
+    ok = (cols >= 0) & (cols < m)
+    rows, cols = rows[ok], cols[ok]
+    vals = rng.standard_normal(len(rows))
+    return _coo_to_csr(rows, cols, vals, m, m, dtype)
+
+
+def stencil2d_csr(nx: int, ny: int, dtype=np.float32) -> CSR:
+    """5-point Poisson stencil on an nx*ny grid — the A_fine of multigrid."""
+    n = nx * ny
+    ii, jj = np.meshgrid(np.arange(nx), np.arange(ny), indexing="ij")
+    idx = (ii * ny + jj).ravel()
+    rows, cols, vals = [idx], [idx], [np.full(n, 4.0)]
+    for di, dj in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+        ni, nj = ii + di, jj + dj
+        ok = ((ni >= 0) & (ni < nx) & (nj >= 0) & (nj < ny)).ravel()
+        rows.append(idx[ok])
+        cols.append((ni * ny + nj).ravel()[ok])
+        vals.append(np.full(int(ok.sum()), -1.0))
+    rows = np.concatenate(rows)
+    cols = np.concatenate(cols)
+    vals = np.concatenate(vals)
+    return _coo_to_csr(rows, cols, vals, n, n, dtype)
+
+
+def aggregation_prolongator(n_fine: int, agg_size: int = 4, seed: int = 0, dtype=np.float32) -> CSR:
+    """Piecewise-constant aggregation prolongator P (n_fine x n_coarse).
+
+    Every ``agg_size`` consecutive fine points map to one coarse aggregate —
+    the structure of smoothed-aggregation AMG's tentative prolongator, used to
+    build the paper's R*A*P triple products.
+    """
+    n_coarse = (n_fine + agg_size - 1) // agg_size
+    rows = np.arange(n_fine)
+    cols = rows // agg_size
+    vals = np.ones(n_fine)
+    return _coo_to_csr(rows, cols, vals, n_fine, n_coarse, dtype)
+
+
+def galerkin_triple(nx: int = 32, ny: int = 32, agg_size: int = 4, seed: int = 0):
+    """Return (R, A, P) with R = P^T for a Galerkin coarse-grid product R*A*P."""
+    a = stencil2d_csr(nx, ny)
+    p = aggregation_prolongator(nx * ny, agg_size, seed)
+    # R = P^T, host-side transpose
+    pd = np.asarray(p.to_dense())
+    r = CSR.from_dense(pd.T)
+    return r, a, p

@@ -1,0 +1,49 @@
+"""Pure-numpy SpGEMM oracles used by every test in the repo.
+
+``gustavson_numpy`` is a literal transcription of the paper's Algorithm 1
+(row-wise Gustavson with a dict accumulator) — the semantic ground truth.
+``dense_spgemm_oracle`` is the O(m*n*k) densified check.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparse.formats import CSR
+
+
+def dense_spgemm_oracle(a: CSR, b: CSR) -> np.ndarray:
+    return np.asarray(a.to_dense()) @ np.asarray(b.to_dense())
+
+
+def gustavson_numpy(a: CSR, b: CSR):
+    """Algorithm 1 of the paper. Returns (indptr, indices, values) with
+    per-row sorted column indices, plus per-row flops f_m (for MAXRF checks).
+    """
+    a_indptr = np.asarray(a.indptr)
+    a_indices = np.asarray(a.indices)
+    a_values = np.asarray(a.values)
+    b_indptr = np.asarray(b.indptr)
+    b_indices = np.asarray(b.indices)
+    b_values = np.asarray(b.values)
+    m = a.m
+
+    indptr = np.zeros(m + 1, np.int32)
+    all_cols, all_vals = [], []
+    row_flops = np.zeros(m, np.int64)
+    for i in range(m):
+        acc: dict[int, float] = {}
+        for e in range(a_indptr[i], a_indptr[i + 1]):
+            j = int(a_indices[e])
+            av = a_values[e]
+            lo, hi = int(b_indptr[j]), int(b_indptr[j + 1])
+            row_flops[i] += hi - lo
+            for f in range(lo, hi):
+                c = int(b_indices[f])
+                acc[c] = acc.get(c, 0.0) + av * b_values[f]
+        cols = np.array(sorted(acc.keys()), np.int32)
+        all_cols.append(cols)
+        all_vals.append(np.array([acc[int(c)] for c in cols], a_values.dtype))
+        indptr[i + 1] = indptr[i] + len(cols)
+    indices = np.concatenate(all_cols) if all_cols else np.zeros(0, np.int32)
+    values = np.concatenate(all_vals) if all_vals else np.zeros(0, a_values.dtype)
+    return indptr, indices, values, row_flops

@@ -1,0 +1,13 @@
+from repro.train.optim import AdamWConfig, OptState, adamw_init, adamw_update, zero1_shardings
+from repro.train.step import cross_entropy_loss, make_train_step, train_step
+
+__all__ = [
+    "AdamWConfig",
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "zero1_shardings",
+    "cross_entropy_loss",
+    "train_step",
+    "make_train_step",
+]

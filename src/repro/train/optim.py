@@ -1,0 +1,124 @@
+"""AdamW with ZeRO-1 optimizer-state sharding and gradient clipping.
+
+Implemented directly (no external deps): moments are stored f32 and sharded
+over the data axes in addition to the parameter's TP sharding wherever a
+dimension divides (``zero1_shardings``) — the standard optimizer-state
+partitioning that keeps the 2x-f32 moment memory off the TP-replicated axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )
+
+
+def adamw_update(grads, state: OptState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        OptState(
+            mu=jax.tree.unflatten(treedef, new_m),
+            nu=jax.tree.unflatten(treedef, new_v),
+            step=step,
+        ),
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+def zero1_shardings(param_shardings, dp_axes: tuple, mesh_shape: dict,
+                    param_specs) -> Any:
+    """Optimizer-moment shardings: param TP sharding + the data axes on the
+    first dimension that is unsharded and divides by the DP size."""
+    dp_size = 1
+    for ax in dp_axes:
+        dp_size *= mesh_shape[ax]
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def shard_one(spec: P, sds) -> P:
+        dims = list(spec) + [None] * (len(sds.shape) - len(spec))
+        # skip leaves already using the data axes (e.g. FSDP'd experts)
+        used = set()
+        for s in dims:
+            for name in (s if isinstance(s, tuple) else (s,)):
+                used.add(name)
+        if any(ax in used for ax in dp_axes):
+            return P(*dims)
+        for i, (s, n) in enumerate(zip(dims, sds.shape)):
+            if s is None and n % dp_size == 0 and n > 0:
+                dims[i] = dp
+                return P(*dims)
+        return P(*dims)
+
+    return jax.tree.map(
+        shard_one, param_shardings, param_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,88 @@
+"""Training step: loss, grads, AdamW update; optional microbatch accumulation.
+
+The step is a single jit-able function suitable for ``.lower()`` in the
+dry-run: inputs are (params, opt_state, batch), all shardings provided via
+``in_shardings``. Gradient all-reduce over the data axes is inserted by
+GSPMD from the batch sharding; overlap with the backward pass is XLA's
+latency-hiding scheduler's job (enabled by the dryrun XLA flags).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.models.sharding import ShardingRules
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE. logits: (B, T, V); labels: (B, T) int32.
+
+    Computed in f32 with the max-subtraction folded in; the (B, T, V)
+    f32 cast stays sharded (dp, None, model) per the logits constraint.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def train_step(params, opt_state, batch: dict, cfg: ModelConfig,
+               rules: ShardingRules, opt_cfg: AdamWConfig, *, mesh=None,
+               num_microbatches: int = 1):
+    """One optimizer step. batch: {'tokens'|'frames', 'labels'}."""
+
+    def loss_fn(p, mb):
+        logits, _ = forward(p, mb, cfg, rules, mesh=mesh, remat=True)
+        return cross_entropy_loss(logits, mb["labels"])
+
+    if num_microbatches <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    else:
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb):
+            loss_acc, grad_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (
+                loss_acc + l / num_microbatches,
+                jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / num_microbatches,
+                    grad_acc, g,
+                ),
+            ), None
+
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss, grads), _ = jax.lax.scan(
+            acc_step, (jnp.zeros((), jnp.float32), zero_grads), mbs
+        )
+
+    params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+    metrics["loss"] = loss
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules,
+                    opt_cfg: Optional[AdamWConfig] = None, *, mesh=None,
+                    num_microbatches: int = 1):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def fn(params, opt_state, batch):
+        return train_step(
+            params, opt_state, batch, cfg, rules, opt_cfg, mesh=mesh,
+            num_microbatches=num_microbatches,
+        )
+
+    return fn

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here by design — smoke
+tests and benches must see 1 CPU device; only launch/dryrun.py (separate
+process) forces 512 placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed():
+    np.random.seed(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Drop compiled-executable references between modules: the full suite
+    jits hundreds of programs and XLA-CPU's JIT object space is finite —
+    without this the tail of the suite hits 'Failed to materialize symbols'
+    resource failures."""
+    yield
+    jax.clear_caches()

@@ -1,0 +1,128 @@
+"""Accumulator data-structure tests (paper §3.1.2): LL / LP semantics,
+two-level L1/L2 spill, max-occupancy rule, memory pool modes."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accumulators import (
+    MAX_OCCUPANCY,
+    accumulate_row,
+    extract_sorted,
+    ll_init,
+    ll_insert,
+    lp_init,
+    lp_insert,
+)
+from repro.core.memory_pool import acquire_release_sim, chunk_for_step, size_pool
+
+
+def _as_dict(ids, vals, live):
+    return {int(k): float(v) for k, v, ok in zip(ids, vals, live) if ok}
+
+
+def _merged(l1, l2, l1_live, l2_live):
+    d1 = _as_dict(*extract_sorted(l1.ids, l1.values, l1_live))
+    d2 = _as_dict(*extract_sorted(l2.ids, l2.values, l2_live))
+    out = dict(d1)
+    for k, v in d2.items():
+        out[k] = out.get(k, 0.0) + v
+    return out
+
+
+def _oracle(keys, vals, valid):
+    d = {}
+    for k, v, ok in zip(keys, vals, valid):
+        if ok:
+            d[int(k)] = d.get(int(k), 0.0) + float(v)
+    return d
+
+
+def test_ll_insert_accumulate():
+    keys = jnp.array([5, 3, 5, 9, 3, 3, 17, 5], jnp.int32)
+    vals = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])
+    valid = jnp.ones(8, bool)
+    l1, l2, spilled = accumulate_row(keys, vals, valid, 8, 16, 16, "ll")
+    assert not bool(spilled)
+    got = _merged(l1, l2, jnp.arange(16) < l1.used, jnp.arange(16) < l2.used)
+    assert got == _oracle(keys, vals, valid)
+
+
+def test_ll_full_spills_to_l2():
+    """L1 capacity 2: first two distinct keys stay, rest spill — and keys
+    already in L1 keep accumulating there (paper Alg. 3 lines 7-10)."""
+    keys = jnp.array([5, 3, 9, 17, 5, 9], jnp.int32)
+    vals = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    valid = jnp.ones(6, bool)
+    l1, l2, spilled = accumulate_row(keys, vals, valid, 4, 2, 8, "ll")
+    assert bool(spilled)
+    d1 = _as_dict(*extract_sorted(l1.ids, l1.values, jnp.arange(2) < l1.used))
+    assert d1 == {5: 6.0, 3: 2.0}  # key 5 accumulated in L1 even after full
+    got = _merged(l1, l2, jnp.arange(2) < l1.used, jnp.arange(8) < l2.used)
+    assert got == _oracle(keys, vals, valid)
+
+
+def test_lp_max_occupancy_rule():
+    """LP rejects NEW keys past 50% occupancy but still accumulates into
+    existing ones (paper: max-occupancy cutoff)."""
+    size = 8  # cutoff = 4
+    keys = jnp.array([0, 1, 2, 3, 4, 0], jnp.int32)
+    vals = jnp.array([1.0, 1.0, 1.0, 1.0, 1.0, 9.0])
+    l1, l2, spilled = accumulate_row(
+        keys, vals, jnp.ones(6, bool), size, size, 8, "lp"
+    )
+    assert bool(spilled)
+    d1 = _as_dict(*extract_sorted(l1.ids, l1.values, l1.ids >= 0))
+    assert 4 not in d1 and d1[0] == 10.0
+    got = _merged(l1, l2, l1.ids >= 0, jnp.arange(8) < l2.used)
+    assert got == _oracle(keys, vals, jnp.ones(6, bool))
+
+
+def test_lp_collision_probing():
+    """Keys hashing to the same slot linear-probe (paper Fig. 4c)."""
+    st8 = lp_init(8)
+    st8, ok1 = lp_insert(st8, jnp.int32(4), jnp.float32(1.0))
+    st8, ok2 = lp_insert(st8, jnp.int32(12), jnp.float32(2.0))  # 12 & 7 == 4
+    assert bool(ok1) and bool(ok2)
+    assert int(st8.ids[4]) == 4 and int(st8.ids[5]) == 12
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 30), keyspace=st.integers(1, 40),
+    l1_cap=st.sampled_from([2, 4, 8]), seed=st.integers(0, 9999),
+    kind=st.sampled_from(["ll", "lp"]),
+)
+def test_two_level_property(n, keyspace, l1_cap, seed, kind):
+    """Any insert stream: merged L1+L2 contents == dict oracle, provided L2
+    is sized at MAXRF (the memory pool guarantee)."""
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, keyspace, n), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    valid = jnp.asarray(rng.random(n) < 0.9)
+    l1, l2, _ = accumulate_row(keys, vals, valid, l1_cap, l1_cap, n + 1, kind)
+    l1_live = (jnp.arange(l1_cap) < l1.used) if kind == "ll" else (l1.ids >= 0)
+    got = _merged(l1, l2, l1_live, jnp.arange(n + 1) < l2.used)
+    want = _oracle(keys, vals, valid)
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-5, atol=1e-6)
+
+
+def test_pool_sizing():
+    cfg = size_pool(maxrf=1000, concurrency=16, mode="one2one")
+    assert cfg.chunk_size == 1000 and cfg.num_chunks == 16
+    # budget shrinks NUMCHUNKS (paper's GPU fallback)
+    cfg = size_pool(maxrf=1000, concurrency=16, mode="many2many",
+                    bytes_budget=2 * 1000 * 8)
+    assert cfg.num_chunks == 2
+    assert chunk_for_step(cfg, 5) == 1
+
+
+def test_pool_many2many_scan():
+    """Concurrent threads with overlapping holds scan to distinct chunks."""
+    got = acquire_release_sim(
+        jnp.array([0, 0, 0, 0], jnp.int32),  # all want chunk 0
+        jnp.array([10, 10, 10, 10], jnp.int32),  # held past the horizon
+        num_chunks=4,
+    )
+    assert sorted(np.asarray(got).tolist()) == [0, 1, 2, 3]

@@ -1,0 +1,97 @@
+"""Assigned-architecture configs: exact shapes from the assignment table."""
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_cells, get_config, skip_reason
+
+EXPECT = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+    "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 0, 151936),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 0, 151936),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_config(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = EXPECT[arch]
+    assert cfg.num_layers == l
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_moe_configs():
+    for arch, ff in [("qwen3-moe-235b-a22b", 1536), ("qwen3-moe-30b-a3b", 768)]:
+        cfg = get_config(arch)
+        assert cfg.num_experts == 128
+        assert cfg.experts_per_token == 8
+        assert cfg.moe_d_ff == ff
+
+
+def test_mamba2_ssm_dims():
+    cfg = get_config("mamba2-2.7b")
+    assert cfg.ssm_state == 128
+    assert cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim == 80  # heads
+
+
+def test_gemma2_features():
+    cfg = get_config("gemma2-9b")
+    assert cfg.pattern == ("local", "global")
+    assert cfg.window == 4096
+    assert cfg.attn_softcap == 50.0 and cfg.final_softcap == 30.0
+
+
+def test_recurrentgemma_pattern():
+    cfg = get_config("recurrentgemma-9b")
+    kinds = list(cfg.pattern) * cfg.pattern_repeats + list(cfg.tail)
+    assert len(kinds) == 38
+    assert kinds.count("rec") == 26 and kinds.count("local") == 12
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_cell_skips():
+    cells = list(all_cells())
+    assert len(cells) == 32  # 40 - 8 documented skips
+    # encoder-only: no decode cells
+    assert skip_reason("hubert-xlarge", "decode_32k")
+    assert skip_reason("hubert-xlarge", "long_500k")
+    # pure full-attention archs skip long_500k
+    for arch in ("llama3.2-1b", "qwen2-7b", "codeqwen1.5-7b",
+                 "phi-3-vision-4.2b", "qwen3-moe-235b-a22b",
+                 "qwen3-moe-30b-a3b"):
+        assert skip_reason(arch, "long_500k")
+    # SSM / hybrid / hybrid-window archs RUN long_500k
+    for arch in ("mamba2-2.7b", "recurrentgemma-9b", "gemma2-9b"):
+        assert skip_reason(arch, "long_500k") is None
+
+
+def test_param_count_sanity():
+    """Named sizes within tolerance of the computed parameter counts."""
+    expected_b = {
+        "llama3.2-1b": 1.24, "qwen2-7b": 7.6, "codeqwen1.5-7b": 8.2,
+        "gemma2-9b": 9.2, "mamba2-2.7b": 2.7, "recurrentgemma-9b": 8.8,
+        "phi-3-vision-4.2b": 3.8, "hubert-xlarge": 0.95,
+        "qwen3-moe-235b-a22b": 235.1, "qwen3-moe-30b-a3b": 30.5,
+    }
+    for arch, want in expected_b.items():
+        got = get_config(arch).param_count() / 1e9
+        assert abs(got - want) / want < 0.05, (arch, got, want)

@@ -1,0 +1,130 @@
+"""Pallas kernel sweeps (interpret=True) vs the pure-jnp ref.py oracles.
+
+Shapes/dtypes swept per kernel; SpGEMM kernels additionally cross-checked
+against the Gustavson numpy oracle.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bitmask_rows
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import TM, grouped_matmul
+from repro.kernels.spgemm_numeric import spgemm_numeric
+from repro.kernels.spgemm_symbolic import spgemm_symbolic
+from repro.kernels.ops import pallas_spgemm
+from repro.sparse import gustavson_numpy, random_csr, stencil2d_csr
+from repro.sparse.formats import csr_to_ell
+
+RNG = np.random.default_rng(0)
+
+
+def _pad_bitmask(bm):
+    pad = (-bm.shape[1]) % 128
+    return jnp.pad(bm, ((0, 0), (0, pad))) if pad else bm
+
+
+@pytest.mark.parametrize("m,n,k,da,db", [
+    (16, 24, 150, 3.0, 4.0),
+    (32, 32, 700, 2.0, 6.0),
+    (8, 64, 4096, 4.0, 2.0),
+])
+def test_spgemm_symbolic_sweep(m, n, k, da, db):
+    a = random_csr(m, n, da, int(da * 10))
+    b = random_csr(n, k, db, int(db * 10))
+    ell = csr_to_ell(a)
+    bm = _pad_bitmask(bitmask_rows(b))
+    got = spgemm_symbolic(ell.indices, ell.row_nnz, bm, interpret=True)
+    want = ref.spgemm_symbolic_ref(ell.indices, ell.row_nnz, bm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    ip, _, _, _ = gustavson_numpy(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.diff(ip))
+
+
+@pytest.mark.parametrize("m,n,k", [(12, 20, 300), (24, 16, 600), (8, 32, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_spgemm_numeric_sweep(m, n, k, dtype):
+    a = random_csr(m, n, 3.0, m)
+    b = random_csr(n, k, 4.0, n)
+    ea, eb = csr_to_ell(a), csr_to_ell(b)
+    ip, ind, val, _ = gustavson_numpy(a, b)
+    r_c = max(int(np.diff(ip).max()), 1)
+    c_idx = np.zeros((m, r_c), np.int32)
+    c_nnz = np.diff(ip).astype(np.int32)
+    for i in range(m):
+        c_idx[i, : c_nnz[i]] = ind[ip[i]: ip[i + 1]]
+    got = spgemm_numeric(
+        ea.indices, ea.values.astype(dtype), ea.row_nnz, eb.indices,
+        eb.values.astype(dtype), jnp.asarray(c_idx), jnp.asarray(c_nnz),
+        k=k, interpret=True,
+    )
+    want = ref.spgemm_numeric_ref(
+        ea.indices, ea.values.astype(dtype), eb.indices,
+        eb.values.astype(dtype), jnp.asarray(c_idx), jnp.asarray(c_nnz), k,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_pallas_spgemm_pipeline():
+    a = stencil2d_csr(6, 6)
+    b = stencil2d_csr(6, 6)
+    c_nnz, c_idx, c_val = pallas_spgemm(a, b)
+    ip, ind, val, _ = gustavson_numpy(a, b)
+    for i in range(a.m):
+        n_i = int(c_nnz[i])
+        assert n_i == ip[i + 1] - ip[i]
+        np.testing.assert_array_equal(np.asarray(c_idx)[i, :n_i], ind[ip[i]: ip[i + 1]])
+        np.testing.assert_allclose(
+            np.asarray(c_val)[i, :n_i], val[ip[i]: ip[i + 1]], rtol=1e-4,
+            atol=1e-5,
+        )
+
+
+@pytest.mark.parametrize("e,d,f,blocks", [(4, 256, 256, 6), (8, 128, 384, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(e, d, f, blocks, dtype):
+    t = blocks * TM
+    be = jnp.asarray(np.sort(RNG.integers(0, e, blocks)).astype(np.int32))
+    x = jnp.asarray(RNG.standard_normal((t, d)), dtype)
+    w = jnp.asarray(RNG.standard_normal((e, d, f)) * 0.1, dtype)
+    got = grouped_matmul(x, w, be, interpret=True)
+    want = ref.grouped_matmul_ref(x, w, jnp.repeat(be, TM))
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("hq,hkv,t,d", [(4, 2, 256, 64), (8, 8, 128, 32),
+                                        (4, 1, 256, 64)])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True),
+    dict(causal=True, window=64),
+    dict(causal=True, softcap=30.0),
+    dict(causal=False),
+])
+def test_flash_attention_sweep(hq, hkv, t, d, kwargs):
+    q = jnp.asarray(RNG.standard_normal((hq, t, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((hkv, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((hkv, t, d)), jnp.float32)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True,
+                          **kwargs)
+    want = ref.flash_attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((2, 128, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )

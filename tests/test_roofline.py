@@ -1,0 +1,114 @@
+"""HLO cost-model validation: the multiplicity-aware parser must match
+XLA's cost_analysis on unrolled programs (where XLA is exact) and correct
+the known while-loop undercount on scanned ones."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.roofline import Roofline, collective_bytes, model_flops_for
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_parser_matches_xla_unrolled():
+    n = 256
+
+    def f(x):
+        for _ in range(8):
+            x = x @ x
+        return x
+
+    comp = _compile(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+    got = analyze_hlo(comp.as_text())
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    np.testing.assert_allclose(got["flops"], ca["flops"], rtol=1e-6)
+    np.testing.assert_allclose(got["flops"], 8 * 2 * n ** 3, rtol=1e-6)
+
+
+def test_parser_corrects_scan_undercount():
+    n = 256
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        return jax.lax.scan(body, x, None, length=8)[0]
+
+    comp = _compile(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+    got = analyze_hlo(comp.as_text())
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    assert ca["flops"] < got["flops"]  # XLA undercounts the loop
+    np.testing.assert_allclose(got["flops"], 8 * 2 * n ** 3, rtol=1e-6)
+
+
+def test_parser_nested_scans():
+    n = 128
+
+    def f(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+
+        return jax.lax.scan(outer, x, None, length=4)[0]
+
+    comp = _compile(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+    got = analyze_hlo(comp.as_text())
+    np.testing.assert_allclose(got["flops"], 12 * 2 * n ** 3, rtol=1e-6)
+
+
+def test_parser_batched_einsum():
+    def f(q, k):
+        return jnp.einsum("bhqd,bhkd->bhqk", q, k)
+
+    s = jax.ShapeDtypeStruct((2, 4, 128, 64), jnp.float32)
+    comp = _compile(f, s, s)
+    got = analyze_hlo(comp.as_text())
+    np.testing.assert_allclose(got["flops"], 2 * 2 * 4 * 128 * 128 * 64,
+                               rtol=1e-6)
+
+
+def test_collective_regex():
+    hlo = """
+ENTRY %main (x: f32[16,128]) -> f32[16,128] {
+  %x = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[16,128]{1,0} all-reduce(%x), to_apply=%add
+  ROOT %out = f32[16,128]{1,0} copy(%ar)
+}
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 64 * 128 * 4
+    assert got["all-reduce"] == 16 * 128 * 4
+
+
+def test_roofline_terms():
+    r = Roofline(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=197e12, hlo_bytes=819e9, coll_bytes_per_chip=50e9,
+        coll_breakdown={}, bytes_per_chip_peak=0.0, model_flops=197e12 * 256,
+    )
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    assert abs(r.useful_ratio - 1.0) < 1e-9
+
+
+def test_model_flops_kinds():
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("llama3.2-1b")
+    n = cfg.active_param_count()
+    assert model_flops_for(cfg, SHAPES["train_4k"]) == 6 * n * 256 * 4096
+    assert model_flops_for(cfg, SHAPES["decode_32k"]) == 2 * n * 128
+    moe = get_config("qwen3-moe-235b-a22b")
+    # MoE counts ACTIVE params only
+    assert moe.active_param_count() < 0.15 * moe.param_count()

@@ -1,0 +1,98 @@
+"""Sparse container + generator tests (formats roundtrips, invariants)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    CSR,
+    banded_csr,
+    csr_to_ell,
+    dense_spgemm_oracle,
+    ell_to_csr,
+    galerkin_triple,
+    gustavson_numpy,
+    random_csr,
+    rmat_csr,
+    stencil2d_csr,
+)
+
+
+def test_csr_dense_roundtrip():
+    x = np.random.randn(17, 23) * (np.random.rand(17, 23) < 0.3)
+    a = CSR.from_dense(x.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(a.to_dense()), x, rtol=1e-6)
+
+
+def test_csr_nnz_cap_padding():
+    x = np.eye(4, dtype=np.float32)
+    a = CSR.from_dense(x, nnz_cap=16)
+    assert a.nnz_cap == 16
+    assert int(a.nnz()) == 4
+    np.testing.assert_allclose(np.asarray(a.to_dense()), x)
+
+
+def test_ell_roundtrip():
+    a = random_csr(40, 30, 3.0, seed=5)
+    e = csr_to_ell(a)
+    np.testing.assert_allclose(
+        np.asarray(e.to_dense()), np.asarray(a.to_dense()), rtol=1e-6
+    )
+    back = ell_to_csr(e)
+    np.testing.assert_allclose(
+        np.asarray(back.to_dense()), np.asarray(a.to_dense()), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("gen", [
+    lambda: random_csr(30, 40, 2.5, 1),
+    lambda: rmat_csr(5, 4, 2),
+    lambda: banded_csr(32, 2, 3),
+    lambda: stencil2d_csr(6, 6),
+])
+def test_generator_invariants(gen):
+    a = gen()
+    indptr = np.asarray(a.indptr)
+    assert indptr[0] == 0
+    assert np.all(np.diff(indptr) >= 0)
+    assert indptr[-1] <= a.nnz_cap
+    idx = np.asarray(a.indices)[: indptr[-1]]
+    assert idx.min() >= 0 and idx.max() < a.k
+    # column indices sorted + unique per row
+    for i in range(a.m):
+        row = idx[indptr[i]: indptr[i + 1]]
+        assert np.all(np.diff(row) > 0)
+
+
+def test_galerkin_shapes():
+    r, a, p = galerkin_triple(8, 8, 4)
+    assert r.shape == (16, 64) and a.shape == (64, 64) and p.shape == (64, 16)
+    # R = P^T
+    np.testing.assert_allclose(
+        np.asarray(r.to_dense()), np.asarray(p.to_dense()).T
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 20), k=st.integers(2, 20),
+    density=st.floats(0.05, 0.5), seed=st.integers(0, 10_000),
+)
+def test_from_dense_to_dense_property(m, k, density, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, k)) * (rng.random((m, k)) < density)).astype(
+        np.float32
+    )
+    a = CSR.from_dense(x)
+    np.testing.assert_allclose(np.asarray(a.to_dense()), x, rtol=1e-6)
+
+
+def test_gustavson_matches_dense():
+    a = random_csr(25, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    ip, ind, val, rf = gustavson_numpy(a, b)
+    dense = np.zeros((25, 20), np.float32)
+    for i in range(25):
+        dense[i, ind[ip[i]: ip[i + 1]]] = val[ip[i]: ip[i + 1]]
+    np.testing.assert_allclose(dense, dense_spgemm_oracle(a, b), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,183 @@
+"""Core SpGEMM tests: two-phase vs Gustavson oracle, compression rules,
+reuse semantics, meta-algorithm — including hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    COMPRESSION_CF_CUTOFF,
+    compress_matrix,
+    compression_decision,
+    flops_stats,
+    numeric_dense_acc,
+    numeric_fresh,
+    numeric_reuse,
+    spgemm,
+    symbolic,
+    symbolic_dense_bitmask,
+    bitmask_rows,
+    choose_method,
+)
+from repro.core.meta import DENSE_K_CUTOFF
+from repro.sparse import (
+    CSR,
+    banded_csr,
+    dense_spgemm_oracle,
+    galerkin_triple,
+    gustavson_numpy,
+    random_csr,
+    rmat_csr,
+    stencil2d_csr,
+)
+from repro.sparse.formats import csr_to_ell
+
+
+CASES = [
+    (random_csr(40, 50, 3.0, 1), random_csr(50, 45, 2.5, 2)),
+    (rmat_csr(5, 5, 3), rmat_csr(5, 5, 4)),
+    (banded_csr(48, 2, 5), banded_csr(48, 3, 6)),
+    (stencil2d_csr(7, 7), stencil2d_csr(7, 7)),
+]
+
+
+@pytest.mark.parametrize("a,b", CASES)
+@pytest.mark.parametrize("method", ["sparse", "dense"])
+def test_spgemm_matches_oracle(a, b, method):
+    res = spgemm(a, b, method=method)
+    np.testing.assert_allclose(
+        np.asarray(res.c.to_dense()), dense_spgemm_oracle(a, b),
+        rtol=1e-4, atol=1e-4,
+    )
+    # structure: sorted per row, identical to Gustavson's
+    ip, ind, _, _ = gustavson_numpy(a, b)
+    np.testing.assert_array_equal(np.asarray(res.c.indptr), ip)
+    np.testing.assert_array_equal(np.asarray(res.c.indices)[: ip[-1]], ind)
+
+
+@pytest.mark.parametrize("a,b", CASES)
+def test_symbolic_row_sizes(a, b):
+    ip, _, _, _ = gustavson_numpy(a, b)
+    for compress in ("auto", "always", "never"):
+        sizes, stats = symbolic(a, b, compress=compress)
+        np.testing.assert_array_equal(np.asarray(sizes), np.diff(ip))
+
+
+def test_two_phase_reuse_equals_fresh():
+    """The paper's Reuse case: same structure, new values, no recompute of
+    the symbolic phase — results must equal a fresh run."""
+    a = random_csr(30, 40, 3.0, 11)
+    b = random_csr(40, 35, 2.0, 12)
+    res = spgemm(a, b, method="sparse")
+    rng = np.random.default_rng(0)
+    new_avals = jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32)
+    new_bvals = jnp.asarray(rng.standard_normal(b.nnz_cap), jnp.float32)
+    a2 = CSR(a.indptr, a.indices, new_avals, a.shape)
+    b2 = CSR(b.indptr, b.indices, new_bvals, b.shape)
+    reused = numeric_reuse(res.plan, a2.values, b2.values)
+    fresh = spgemm(a2, b2, method="sparse")
+    nnz = int(fresh.c.nnz())
+    np.testing.assert_allclose(
+        np.asarray(reused)[:nnz], np.asarray(fresh.c.values)[:nnz],
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_explicit_zeros_kept():
+    """Numerical cancellation must keep the symbolic structure (the paper's
+    accumulators track occupancy, not value != 0)."""
+    a = CSR.from_dense(np.array([[1.0, 1.0]], np.float32))
+    b = CSR.from_dense(np.array([[1.0], [-1.0]], np.float32))
+    res = spgemm(a, b, method="sparse")
+    assert int(res.c.nnz()) == 1  # structurally present
+    assert abs(float(res.c.values[0])) < 1e-6  # numerically zero
+
+
+def test_compression_rules():
+    # banded matrices compress well (packed columns)
+    a = banded_csr(64, 4, 1)
+    bc = compress_matrix(a)
+    cf, cmrf, use = compression_decision(a, a, bc)
+    assert cf < COMPRESSION_CF_CUTOFF and use
+    # 1-nnz-per-row matrices cannot compress
+    p = CSR.from_dense(np.eye(32, 8, dtype=np.float32).repeat(1, axis=0))
+    r, A, p = galerkin_triple(6, 6, 4)
+    bcp = compress_matrix(p)
+    cf_p, _, use_p = compression_decision(A, p, bcp)
+    assert cf_p == 1.0 and not use_p
+
+
+def test_compressed_sizes_match_bitmask_rows():
+    b = random_csr(30, 100, 4.0, 3)
+    bc = compress_matrix(b)
+    bm = np.asarray(bitmask_rows(b))
+    popc = np.unpackbits(bm.view(np.uint8), axis=1).sum(1)
+    rn = np.asarray(bc.row_nnz())
+    # compressed row sizes == #distinct CSI per row
+    ip = np.asarray(b.indptr)
+    ix = np.asarray(b.indices)
+    for i in range(b.m):
+        csis = set(int(c) >> 5 for c in ix[ip[i]: ip[i + 1]])
+        assert rn[i] == len(csis)
+
+
+def test_dense_bitmask_symbolic():
+    a = stencil2d_csr(8, 8)
+    b = stencil2d_csr(8, 8)
+    ell = csr_to_ell(a)
+    bm = bitmask_rows(b)
+    sizes = symbolic_dense_bitmask(ell, bm, block_rows=16)
+    ip, _, _, _ = gustavson_numpy(a, b)
+    np.testing.assert_array_equal(np.asarray(sizes), np.diff(ip))
+
+
+def test_meta_algorithm_cutoffs():
+    small_b = random_csr(10, 100, 2.0, 1)
+    big_b = CSR(
+        indptr=small_b.indptr, indices=small_b.indices,
+        values=small_b.values, shape=(10, DENSE_K_CUTOFF + 1),
+    )
+    a = random_csr(10, 10, 2.0, 2)
+    assert choose_method(a, small_b, {}) == "dense"
+    assert choose_method(a, big_b, {}) == "sparse"
+
+
+def test_triple_product_galerkin():
+    """R*A*P multigrid product (24 of the paper's 83 cases are R*A*P)."""
+    r, a, p = galerkin_triple(8, 8, 4)
+    ap = spgemm(a, p).c
+    rap = spgemm(r, ap).c
+    want = (np.asarray(r.to_dense()) @ np.asarray(a.to_dense())
+            @ np.asarray(p.to_dense()))
+    np.testing.assert_allclose(np.asarray(rap.to_dense()), want, rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 24), n=st.integers(2, 24), k=st.integers(2, 24),
+    da=st.floats(0.5, 4.0), db=st.floats(0.5, 4.0),
+    seed=st.integers(0, 99999),
+)
+def test_spgemm_property(m, n, k, da, db, seed):
+    """For arbitrary random CSR pairs: dense(spgemm(A,B)) == dense(A)@dense(B)
+    and symbolic sizes == structural product row sizes."""
+    a = random_csr(m, n, da, seed)
+    b = random_csr(n, k, db, seed + 1)
+    res = spgemm(a, b)
+    np.testing.assert_allclose(
+        np.asarray(res.c.to_dense()), dense_spgemm_oracle(a, b),
+        rtol=1e-3, atol=1e-3,
+    )
+    sizes, _ = symbolic(a, b)
+    mask = (np.asarray(a.to_dense()) != 0) @ (np.asarray(b.to_dense()) != 0)
+    np.testing.assert_array_equal(np.asarray(sizes), (mask > 0).sum(1))
+
+
+def test_flops_stats():
+    a = random_csr(20, 30, 2.0, 4)
+    b = random_csr(30, 25, 3.0, 5)
+    fm, row_flops, maxrf = flops_stats(a, b.row_nnz())
+    _, _, _, rf = gustavson_numpy(a, b)
+    np.testing.assert_array_equal(np.asarray(row_flops), rf)
+    assert int(fm) == rf.sum() and int(maxrf) == rf.max()
