@@ -9,12 +9,18 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        slowdown vs best)
   bench_compression  — Table 3 / §4.3: CF, CMRF, symbolic time +/- compression
   bench_reuse        — Fig 6(d)/(f): NoReuse vs Reuse numeric phase
+  bench_compile      — recompile counts + plan-cache hit rate: same-bucket
+                       structures share executables, repeats hit the cache
   bench_fm_groups    — Fig 8: meta-vs-fixed speedup grouped by f_m
   bench_distributed  — §multi-pod: 1-D row-wise SpGEMM scaling terms
   bench_train_smoke  — LM substrate: tokens/s of a smoke train step
+
+``--quick`` runs a CI-sized smoke subset (2 suite cases, compile + reuse
+benches only).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -23,16 +29,21 @@ import numpy as np
 
 from benchmarks.suite import suite
 from repro.core import (
+    PlanCache,
     compress_matrix,
     compression_decision,
     numeric_reuse,
+    reset_trace_counts,
+    round_capacity,
     spgemm,
     symbolic,
 )
-from repro.core.spgemm import _round8, numeric_fresh, symbolic_plain, symbolic_compressed
+from repro.core.spgemm import TRACE_COUNTS, numeric_fresh, symbolic_plain, symbolic_compressed
 from repro.core.compression import flops_stats
+from repro.sparse import CSR, random_csr
 
 ROWS: list[str] = []
+CASES: list = []  # populated by main(); benches iterate this, not suite()
 
 
 def emit(name: str, us: float, derived: str = ""):
@@ -61,11 +72,11 @@ def _fm(a, b) -> int:
 def bench_methods():
     """GFLOPS/s (2*f_m flops, as the paper counts) per method per matrix."""
     results = {}
-    for name, a, b in suite():
+    for name, a, b in CASES:
         fm = _fm(a, b)
         res = spgemm(a, b)  # warm caches, get caps
-        fm_cap = _round8(fm)
-        nnz_cap = max(_round8(int(res.c.nnz())), 8)
+        fm_cap = round_capacity(fm)
+        nnz_cap = round_capacity(int(res.c.nnz()))
         per_method = {}
         us_sym, _ = timeit(lambda: symbolic(a, b)[0])
         us_num, _ = timeit(lambda: numeric_fresh(a, b, fm_cap, nnz_cap)[0])
@@ -102,16 +113,16 @@ def bench_profile(results):
 
 def bench_compression():
     """CF / CMRF + symbolic-phase time with vs without compression."""
-    for name, a, b in suite():
+    for name, a, b in CASES:
         bc = compress_matrix(b)
         cf, cmrf, use = compression_decision(a, b, bc)
         fm = _fm(a, b)
-        cap_plain = _round8(fm)
+        cap_plain = round_capacity(fm)
         us_plain, _ = timeit(lambda: symbolic_plain(a, b, cap_plain))
         fm_c = int(jnp.sum(jnp.where(
             a.valid_mask(),
             bc.row_nnz()[jnp.minimum(a.indices, bc.indptr.shape[0] - 2)], 0)))
-        cap_c = _round8(max(fm_c, 1))
+        cap_c = round_capacity(max(fm_c, 1))
         us_comp, _ = timeit(
             lambda: symbolic_compressed(a, bc, a.m, cap_c))
         emit(f"compression/{name}", us_comp,
@@ -121,11 +132,11 @@ def bench_compression():
 
 def bench_reuse():
     """Reuse (numeric only, cached plan) vs NoReuse (symbolic+numeric)."""
-    for name, a, b in suite():
+    for name, a, b in CASES:
         res = spgemm(a, b, method="sparse")
         fm = _fm(a, b)
-        fm_cap = _round8(fm)
-        nnz_cap = max(_round8(int(res.c.nnz())), 8)
+        fm_cap = round_capacity(fm)
+        nnz_cap = round_capacity(int(res.c.nnz()))
         us_sym, _ = timeit(lambda: symbolic(a, b)[0])
         us_fresh, _ = timeit(lambda: numeric_fresh(a, b, fm_cap, nnz_cap)[0])
         us_reuse, _ = timeit(
@@ -133,6 +144,54 @@ def bench_reuse():
         noreuse = us_sym + us_fresh
         emit(f"reuse/{name}", us_reuse,
              f"noreuse_us={noreuse:.0f};speedup={noreuse / us_reuse:.2f}")
+
+
+def bench_compile():
+    """Recompile counts + plan-cache hit rate through the public spgemm().
+
+    Three calls tell the whole bucketing/caching story:
+      1. fresh structure       -> traces every pipeline stage once (miss)
+      2. same-bucket structure -> different graph, same capacity buckets:
+                                  zero new traces (executables shared)
+      3. repeated structure    -> new values only: plan-cache hit, zero
+                                  traces, no expansion/sort at all
+    """
+    jax.clear_caches()  # measure traces from a clean slate
+    reset_trace_counts()
+    cache = PlanCache(capacity=8)
+    mk = lambda seed: random_csr(256, 256, 5.0, seed)
+    a1, b1 = mk(101), mk(102)
+    a2, b2 = mk(103), mk(104)  # same shape/density -> same capacity buckets
+
+    def one_call(a, b):
+        """Single timed call — compile cost included, that's the point."""
+        t0 = time.perf_counter()
+        res = spgemm(a, b, method="sparse", plan_cache=cache)
+        jax.block_until_ready(res.c.values)
+        return (time.perf_counter() - t0) * 1e6, res
+
+    us1, res1 = one_call(a1, b1)
+    traces_first = sum(TRACE_COUNTS.values())
+
+    us2, res2 = one_call(a2, b2)
+    traces_same_bucket = sum(TRACE_COUNTS.values()) - traces_first
+
+    rng = np.random.default_rng(0)
+    a1v = CSR(a1.indptr, a1.indices,
+              jnp.asarray(rng.standard_normal(a1.nnz_cap), jnp.float32), a1.shape)
+    us3, res3 = one_call(a1v, b1)
+    traces_hit = sum(TRACE_COUNTS.values()) - traces_first - traces_same_bucket
+
+    cs = cache.stats()
+    emit("compile/fresh", us1,
+         f"traces={traces_first};expansions={TRACE_COUNTS['expand_and_sort']};"
+         f"cache={res1.stats['cache']}")
+    emit("compile/same_bucket", us2,
+         f"new_traces={traces_same_bucket};cache={res2.stats['cache']}")
+    emit("compile/cache_hit", us3,
+         f"new_traces={traces_hit};cache={res3.stats['cache']}")
+    emit("compile/cache", 0.0,
+         f"hits={cs['hits']};misses={cs['misses']};hit_rate={cs['hit_rate']:.2f}")
 
 
 def bench_fm_groups(results):
@@ -157,7 +216,7 @@ def bench_distributed():
 
     mesh = jax.make_mesh((1,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
-    for name, a, b in list(suite())[:3]:
+    for name, a, b in CASES[:3]:
         us_local, _ = timeit(lambda: spgemm(a, b).c.values)
         us_dist, _ = timeit(
             lambda: distributed_spgemm(a, b, mesh).values)
@@ -191,15 +250,27 @@ def bench_train_smoke():
              f"tokens_per_s={toks / (us * 1e-6):.0f}")
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--quick", action="store_true",
+        help="CI smoke subset: 2 suite cases, compile + reuse benches only",
+    )
+    args = parser.parse_args(argv)
+    CASES[:] = list(suite())[:2] if args.quick else list(suite())
     print("name,us_per_call,derived")
-    results = bench_methods()
-    bench_profile(results)
-    bench_compression()
-    bench_reuse()
-    bench_fm_groups(results)
-    bench_distributed()
-    bench_train_smoke()
+    if args.quick:
+        bench_compile()
+        bench_reuse()
+    else:
+        results = bench_methods()
+        bench_profile(results)
+        bench_compression()
+        bench_reuse()
+        bench_compile()
+        bench_fm_groups(results)
+        bench_distributed()
+        bench_train_smoke()
     print(f"# {len(ROWS)} rows")
 
 

@@ -31,7 +31,8 @@ def main():
 
     ap = spgemm(a, p, method="sparse")  # sparse path returns a reuse plan
     print(f"A*P: nnz={ap.stats['nnz_c']}  method={ap.stats['method']}  "
-          f"cf={ap.stats['cf']:.2f} compressed={ap.stats['compressed']}")
+          f"cache={ap.stats['cache']}  fm_cap={ap.stats['fm_cap']} "
+          f"(pad_policy={ap.stats['pad_policy']})")
     rap = spgemm(r, ap.c)
     want = (np.asarray(r.to_dense()) @ np.asarray(a.to_dense())
             @ np.asarray(p.to_dense()))

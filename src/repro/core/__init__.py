@@ -7,15 +7,21 @@ Public API:
     numeric_reuse     — phase 2, Reuse case (new values, same structure)
     compress_matrix   — §3.2 bit compression
     distributed_spgemm — 1-D row-wise SpGEMM over a device mesh
+    round_capacity    — capacity bucketing policy ("exact8" / "pow2")
+    PlanCache         — structure-keyed LRU of reuse plans (auto Reuse case)
 """
 from repro.core.spgemm import (
+    SortedExpansion,
     SpgemmPlan,
     SpgemmResult,
+    expand_and_sort,
     expand_products,
     host_fm_cap,
     numeric_dense_acc,
     numeric_fresh,
     numeric_reuse,
+    plan_from_sorted,
+    reset_trace_counts,
     spgemm,
     symbolic,
     symbolic_compressed,
@@ -32,11 +38,15 @@ from repro.core.compression import (
 )
 from repro.core.meta import (
     AVG_ROW_FLOPS_CUTOFF,
+    DEFAULT_PAD_POLICY,
     DENSE_K_CUTOFF,
+    PAD_POLICIES,
     choose_kernel,
     choose_method,
     estimate_ars,
+    round_capacity,
 )
+from repro.core.plan_cache import PlanCache, default_plan_cache, structure_key
 from repro.core.distributed import (
     ShardedCSR,
     concat_csr_shards,
@@ -49,9 +59,13 @@ from repro.core.distributed import (
 from repro.core.memory_pool import PoolConfig, acquire_release_sim, chunk_for_step, size_pool
 
 __all__ = [
+    "SortedExpansion",
     "SpgemmPlan",
     "SpgemmResult",
+    "expand_and_sort",
     "expand_products",
+    "plan_from_sorted",
+    "reset_trace_counts",
     "host_fm_cap",
     "numeric_dense_acc",
     "numeric_fresh",
@@ -68,10 +82,16 @@ __all__ = [
     "compression_decision",
     "flops_stats",
     "AVG_ROW_FLOPS_CUTOFF",
+    "DEFAULT_PAD_POLICY",
     "DENSE_K_CUTOFF",
+    "PAD_POLICIES",
     "choose_kernel",
     "choose_method",
     "estimate_ars",
+    "round_capacity",
+    "PlanCache",
+    "default_plan_cache",
+    "structure_key",
     "ShardedCSR",
     "concat_csr_shards",
     "dist_numeric",

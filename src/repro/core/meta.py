@@ -20,6 +20,30 @@ AVG_ROW_FLOPS_CUTOFF = 256  # paper §3.3 (GPU variant selection)
 ARS_REDUCTION_GUESS = 8  # paper §3.3: every 8th multiply collides
 DENSE_BYTES_BUDGET = 1 << 30  # 1 GiB guard for the XLA dense accumulator
 
+# Capacity padding policies for the static-shape caps (fm_cap / nnz_cap / ELL
+# widths). "exact8" is the tightest lane-aligned cap; "pow2" rounds up to
+# geometric x2 buckets so matrices of similar size share one compiled
+# executable instead of each minting its own (the recompile amortization that
+# makes the paper's Reuse case pay off under XLA).
+PAD_POLICIES = ("exact8", "pow2")
+DEFAULT_PAD_POLICY = "pow2"
+CAPACITY_FLOOR = 8  # minimum cap: one 8-lane sublane
+
+
+def round_capacity(x: int, policy: str = DEFAULT_PAD_POLICY) -> int:
+    """Round a size up to a static capacity under the given pad policy.
+
+    "exact8": next multiple of 8 (tight; every distinct size recompiles).
+    "pow2":   next power of two (geometric buckets; sizes within a x2 band
+              share the same compiled executable).
+    """
+    x = max(int(x), 1)
+    if policy == "exact8":
+        return max(-(-x // 8) * 8, CAPACITY_FLOOR)
+    if policy == "pow2":
+        return max(1 << (x - 1).bit_length(), CAPACITY_FLOOR)
+    raise ValueError(f"unknown pad_policy {policy!r}; expected one of {PAD_POLICIES}")
+
 
 def choose_method(a: CSR, b: CSR, stats: dict) -> str:
     """Return 'dense' or 'sparse' for the XLA numeric phase."""

@@ -13,9 +13,36 @@ Accumulation strategy per the TPU adaptation (DESIGN.md §2): sorted-segment
 accumulation (Thread-Flat-Parallel semantics — associative, atomic-free) and
 dense scatter accumulation (KKDENSE). Hash accumulators live in
 ``core/accumulators.py`` (jittable LL/LP ports) and ``kernels/`` (Pallas).
+
+Pipeline & Reuse
+----------------
+A fresh ``spgemm()`` runs a *single-expansion* pipeline: one
+``expand_products`` call and **one** sort feed both the symbolic row counts
+and the numeric ``SpgemmPlan``. The sort packs ``(row, col)`` into a single
+integer key and argsorts once (``_single_sort_order``) — replacing the two
+stable passes of ``lexsort`` — and its contract is exact equivalence with
+``jnp.lexsort((col, row))``: stable, lexicographic by row then column. The
+stages are:
+
+  ``expand_and_sort``  (jit, static fm_cap)  -> sorted products + row sizes
+  host                                       -> nnz(C), bucketed nnz_cap
+  ``plan_from_sorted`` (jit, static nnz_cap) -> SpgemmPlan
+  ``numeric_reuse``    (jit)                 -> C values
+
+Static capacities (``fm_cap``, ``nnz_cap``, and the CSR buffer caps of A and
+B) are rounded up to geometric x2 buckets under ``core.meta.round_capacity``
+(knob: ``pad_policy``, default "pow2"), so matrices of similar size share one
+compiled executable instead of each minting its own. On top of that,
+``spgemm()`` consults a structure-keyed LRU plan cache
+(``core/plan_cache.py``): a repeated structure with new values skips the
+expansion and sort entirely and replays ``numeric_reuse`` — the paper's Reuse
+case with zero caller bookkeeping and zero recompiles. ``TRACE_COUNTS``
+records retraces of every jitted stage so benchmarks and tests can assert the
+one-expansion/one-sort contract and the bucketing's recompile savings.
 """
 from __future__ import annotations
 
+from collections import Counter
 from functools import partial
 from typing import NamedTuple
 
@@ -29,8 +56,23 @@ from repro.core.compression import (
     compression_decision,
     flops_stats,
 )
+from repro.core.meta import DEFAULT_PAD_POLICY, round_capacity
 from repro.core.utils import popcount, segmented_scan, segment_ends
 from repro.sparse.formats import CSR, csr_row_ids
+
+# Retrace telemetry: each jitted stage bumps its counter at *trace* time only,
+# so the counts measure XLA recompiles, not calls. Benchmarks (bench_compile)
+# and tests read these to verify the single-expansion contract and that
+# capacity bucketing actually shares executables.
+TRACE_COUNTS: Counter = Counter()
+
+
+def _note_trace(name: str) -> None:
+    TRACE_COUNTS[name] += 1
+
+
+def reset_trace_counts() -> None:
+    TRACE_COUNTS.clear()
 
 
 class ProductExpansion(NamedTuple):
@@ -47,6 +89,27 @@ class ProductExpansion(NamedTuple):
     valid: jax.Array
 
 
+class SortedExpansion(NamedTuple):
+    """One expansion + one sort: everything both phases need.
+
+    Produced by ``expand_and_sort``; consumed by the host (``row_sizes`` ->
+    nnz(C)) and by ``plan_from_sorted`` (everything else). ``heads`` marks the
+    first product of each distinct (row, col) group in sorted order;
+    ``seg_ids`` maps each sorted product to its C slot.
+    """
+
+    order: jax.Array  # (fm_cap,) int32 — the single sort permutation
+    rows_s: jax.Array  # (fm_cap,) int32 — rows in sorted order
+    cols_s: jax.Array  # (fm_cap,) int32 — cols in sorted order
+    valid_s: jax.Array  # (fm_cap,) bool — validity in sorted order
+    heads: jax.Array  # (fm_cap,) bool — group heads (padding mints none)
+    seg_ids: jax.Array  # (fm_cap,) int32 — sorted product -> C slot
+    a_slot: jax.Array  # (fm_cap,) int32 — unsorted, from the expansion
+    b_slot: jax.Array  # (fm_cap,) int32
+    valid: jax.Array  # (fm_cap,) bool
+    row_sizes: jax.Array  # (m,) int32 — the symbolic output
+
+
 class SpgemmPlan(NamedTuple):
     """Cached numeric plan enabling the Reuse fast path."""
 
@@ -60,6 +123,36 @@ class SpgemmPlan(NamedTuple):
     shape: tuple  # (m, k) of C
 
 
+def _single_sort_order(rows: jax.Array, keys: jax.Array, m: int,
+                       key_bound: int | None) -> jax.Array:
+    """Stable sort permutation by (rows, keys) in ONE pass.
+
+    Packs the pair into a single integer key and argsorts once — the
+    replacement for ``jnp.lexsort((keys, rows))``'s two stable passes. Rows
+    may carry the padding sentinel ``m``; keys must lie in [0, key_bound).
+    Ordering is exactly lexsort's: stable, by row then key.
+
+    Width selection is static (m, key_bound are trace-time ints): int32
+    packing when (m+1)*key_bound fits, int64 when x64 is enabled, otherwise a
+    single fused two-key ``lax.sort`` — still one sort pass, never two.
+    ``key_bound=None`` means "unknown at trace time": use the fused sort.
+    """
+    span = None if key_bound is None else (m + 1) * key_bound  # rows pad to m
+    if span is not None and span <= np.iinfo(np.int32).max:
+        packed = rows.astype(jnp.int32) * jnp.int32(key_bound) + keys.astype(jnp.int32)
+        return jnp.argsort(packed, stable=True).astype(jnp.int32)
+    if span is not None and jax.config.jax_enable_x64 and span <= np.iinfo(np.int64).max:
+        packed = rows.astype(jnp.int64) * jnp.int64(key_bound) + keys.astype(jnp.int64)
+        return jnp.argsort(packed, stable=True).astype(jnp.int32)
+    iota = jnp.arange(rows.shape[0], dtype=jnp.int32)
+    _, _, order = jax.lax.sort(
+        (rows.astype(jnp.int32), keys.astype(jnp.int32), iota),
+        num_keys=2,
+        is_stable=True,
+    )
+    return order
+
+
 @partial(jax.jit, static_argnames=("fm_cap",))
 def expand_products(a: CSR, b: CSR, fm_cap: int) -> ProductExpansion:
     """Enumerate all f_m multiplications with static capacity ``fm_cap``.
@@ -67,6 +160,7 @@ def expand_products(a: CSR, b: CSR, fm_cap: int) -> ProductExpansion:
     For product t: binary-search the owning A-slot in the exclusive prefix of
     per-A-slot product counts, then offset into B's row. Fully vectorized.
     """
+    _note_trace("expand_products")
     b_row_nnz = b.row_nnz()
     a_valid = a.valid_mask()
     per_slot = jnp.where(
@@ -94,6 +188,68 @@ def expand_products(a: CSR, b: CSR, fm_cap: int) -> ProductExpansion:
     )
 
 
+@partial(jax.jit, static_argnames=("fm_cap",))
+def expand_and_sort(a: CSR, b: CSR, fm_cap: int) -> SortedExpansion:
+    """The fused front half of a fresh multiply: ONE expansion, ONE sort.
+
+    Returns sorted products plus per-row distinct-column counts — the
+    symbolic phase's answer — so the driver never expands or sorts again for
+    the numeric plan.
+    """
+    _note_trace("expand_and_sort")
+    ex = expand_products(a, b, fm_cap)
+    order = _single_sort_order(ex.row, ex.col, a.m, b.k)
+    rows_s = ex.row[order]
+    cols_s = ex.col[order]
+    valid_s = ex.valid[order]
+    heads = jnp.concatenate(
+        [
+            jnp.ones((1,), jnp.bool_),
+            (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
+        ]
+    )
+    heads = heads & valid_s  # padding (row==m) groups don't mint slots
+    seg_ids = (jnp.cumsum(heads.astype(jnp.int32)) - 1).clip(0).astype(jnp.int32)
+    row_sizes = jnp.zeros((a.m,), jnp.int32).at[jnp.minimum(rows_s, a.m - 1)].add(
+        heads.astype(jnp.int32), mode="drop"
+    )
+    return SortedExpansion(
+        order=order,
+        rows_s=rows_s,
+        cols_s=cols_s,
+        valid_s=valid_s,
+        heads=heads,
+        seg_ids=seg_ids,
+        a_slot=ex.a_slot,
+        b_slot=ex.b_slot,
+        valid=ex.valid,
+        row_sizes=row_sizes,
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "nnz_cap"))
+def plan_from_sorted(sx: SortedExpansion, k: int, nnz_cap: int) -> SpgemmPlan:
+    """Back half of a fresh multiply: C structure + reuse plan, no re-sort."""
+    _note_trace("plan_from_sorted")
+    m = sx.row_sizes.shape[0]
+    c_indices = jnp.zeros((nnz_cap,), jnp.int32).at[sx.seg_ids].max(
+        jnp.where(sx.heads, sx.cols_s, 0), mode="drop"
+    )
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sx.row_sizes).astype(jnp.int32)]
+    )
+    return SpgemmPlan(
+        indptr=indptr,
+        indices=c_indices,
+        order=sx.order,
+        seg_ids=jnp.where(sx.valid_s, sx.seg_ids, nnz_cap),  # padded -> dropped
+        a_slot=sx.a_slot,
+        b_slot=sx.b_slot,
+        valid=sx.valid,
+        shape=(m, k),
+    )
+
+
 def host_fm_cap(a: CSR, b: CSR, pad_to: int = 8) -> int:
     """Host-side f_m (total products) rounded up — the static expansion size."""
     fm, _, _ = flops_stats(a, b.row_nnz())
@@ -106,11 +262,12 @@ def host_fm_cap(a: CSR, b: CSR, pad_to: int = 8) -> int:
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("fm_cap", "m"))
-def _symbolic_sorted(rows, keys, payload, valid, m: int, fm_cap: int):
+@partial(jax.jit, static_argnames=("fm_cap", "m", "key_bound"))
+def _symbolic_sorted(rows, keys, payload, valid, m: int, fm_cap: int, key_bound: int):
     """Shared core: sort (row, key) pairs, OR payloads per group, count groups
     per row (plain symbolic: payload == popcount 1 per distinct column)."""
-    order = jnp.lexsort((keys, rows))
+    _note_trace("_symbolic_sorted")
+    order = _single_sort_order(rows, keys, m, key_bound)
     rows_s, keys_s, valid_s = rows[order], keys[order], valid[order]
     pay_s = payload[order]
     heads = jnp.concatenate(
@@ -128,10 +285,15 @@ def _symbolic_sorted(rows, keys, payload, valid, m: int, fm_cap: int):
     return sizes
 
 
-@partial(jax.jit, static_argnames=("fm_cap", "m"))
-def symbolic_compressed(a: CSR, bc: CompressedMatrix, m: int, fm_cap: int) -> jax.Array:
+@partial(jax.jit, static_argnames=("fm_cap", "m", "key_bound"))
+def symbolic_compressed(a: CSR, bc: CompressedMatrix, m: int, fm_cap: int,
+                        key_bound: int | None = None) -> jax.Array:
     """Symbolic phase on the compressed B (paper §3.2): expand (row, CSI, CS)
-    products, OR the CS masks per (row, CSI), sum popcounts per row."""
+    products, OR the CS masks per (row, CSI), sum popcounts per row.
+
+    key_bound: static bound on CSI values (ceil(k/32)) enabling the packed
+    single-key sort; None falls back to the fused two-key sort."""
+    _note_trace("symbolic_compressed")
     bc_row_nnz = bc.row_nnz()
     a_valid = a.valid_mask()
     nb = bc.indptr.shape[0] - 1
@@ -153,15 +315,18 @@ def symbolic_compressed(a: CSR, bc: CompressedMatrix, m: int, fm_cap: int) -> ja
     rows = jnp.where(valid, csr_row_ids(a.indptr, a.nnz_cap)[a_slot], m)
     keys = jnp.where(valid, bc.csi[b_slot], 0)
     cs = jnp.where(valid, bc.cs[b_slot], jnp.uint32(0))
-    return _symbolic_sorted(rows, keys, cs, valid, m, fm_cap)
+    return _symbolic_sorted(rows, keys, cs, valid, m, fm_cap, key_bound=key_bound)
 
 
 @partial(jax.jit, static_argnames=("fm_cap",))
 def symbolic_plain(a: CSR, b: CSR, fm_cap: int) -> jax.Array:
     """Uncompressed symbolic: distinct-column count per row via sort."""
+    _note_trace("symbolic_plain")
     ex = expand_products(a, b, fm_cap)
     ones = jnp.where(ex.valid, jnp.uint32(1), jnp.uint32(0))
-    return _symbolic_sorted(ex.row, ex.col, ones, ex.valid, a.m, fm_cap)
+    return _symbolic_sorted(
+        ex.row, ex.col, ones, ex.valid, a.m, fm_cap, key_bound=max(b.k, 1)
+    )
 
 
 @partial(jax.jit, static_argnames=("block_rows",))
@@ -203,43 +368,13 @@ def symbolic_dense_bitmask(a_ell, b_bitmask: jax.Array, block_rows: int = 64) ->
 @partial(jax.jit, static_argnames=("fm_cap", "nnz_cap"))
 def numeric_fresh(a: CSR, b: CSR, fm_cap: int, nnz_cap: int):
     """First numeric run: discovers C's structure and the product->slot map,
-    computes values. Returns (CSR C, SpgemmPlan)."""
-    ex = expand_products(a, b, fm_cap)
-    order = jnp.lexsort((ex.col, ex.row)).astype(jnp.int32)
-    rows_s = ex.row[order]
-    cols_s = ex.col[order]
-    valid_s = ex.valid[order]
-    heads = jnp.concatenate(
-        [
-            jnp.ones((1,), jnp.bool_),
-            (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
-        ]
-    )
-    heads = heads & valid_s  # padding (row==m) groups don't mint slots
-    seg_ids = (jnp.cumsum(heads.astype(jnp.int32)) - 1).clip(0).astype(jnp.int32)
-
-    # C structure: one slot per group head.
-    c_indices = jnp.zeros((nnz_cap,), jnp.int32).at[seg_ids].max(
-        jnp.where(heads, cols_s, 0), mode="drop"
-    )
-    row_sizes = jnp.zeros((a.m,), jnp.int32).at[jnp.minimum(rows_s, a.m - 1)].add(
-        (heads & valid_s).astype(jnp.int32), mode="drop"
-    )
-    indptr = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(row_sizes).astype(jnp.int32)]
-    )
-    plan = SpgemmPlan(
-        indptr=indptr,
-        indices=c_indices,
-        order=order,
-        seg_ids=jnp.where(valid_s, seg_ids, nnz_cap),  # padded -> dropped
-        a_slot=ex.a_slot,
-        b_slot=ex.b_slot,
-        valid=ex.valid,
-        shape=(a.m, b.k),
-    )
+    computes values. Returns (CSR C, SpgemmPlan). Jittable end-to-end (used
+    inside shard_map); composes the single-expansion stages inline."""
+    _note_trace("numeric_fresh")
+    sx = expand_and_sort(a, b, fm_cap)
+    plan = plan_from_sorted(sx, b.k, nnz_cap)
     values = numeric_reuse(plan, a.values, b.values)
-    c = CSR(indptr=indptr, indices=c_indices, values=values, shape=(a.m, b.k))
+    c = CSR(indptr=plan.indptr, indices=plan.indices, values=values, shape=(a.m, b.k))
     return c, plan
 
 
@@ -247,6 +382,7 @@ def numeric_fresh(a: CSR, b: CSR, fm_cap: int, nnz_cap: int):
 def numeric_reuse(plan: SpgemmPlan, a_values: jax.Array, b_values: jax.Array) -> jax.Array:
     """The Reuse case: same structure, new values. Gather products in sorted
     order and segment-sum into C slots. No sort, no hash, no recompile."""
+    _note_trace("numeric_reuse")
     prod = jnp.where(
         plan.valid, a_values[plan.a_slot] * b_values[plan.b_slot], 0
     ).astype(a_values.dtype)
@@ -263,6 +399,7 @@ def numeric_dense_acc(a: CSR, b: CSR, fm_cap: int, nnz_cap: int) -> CSR:
     then extract the CSR structure with a fixed-size nonzero scan. Chosen by
     the meta-algorithm when k is small (paper: k < 250k). O(m*k) memory —
     exactly the paper's dense-accumulator trade-off."""
+    _note_trace("numeric_dense_acc")
     ex = expand_products(a, b, fm_cap)
     vals = jnp.where(ex.valid, a.values[ex.a_slot] * b.values[ex.b_slot], 0)
     dense = jnp.zeros((a.m, b.k), a.dtype)
@@ -297,7 +434,8 @@ class SpgemmResult(NamedTuple):
     stats: dict
 
 
-def symbolic(a: CSR, b: CSR, compress: str = "auto"):
+def symbolic(a: CSR, b: CSR, compress: str = "auto",
+             pad_policy: str = DEFAULT_PAD_POLICY):
     """Paper Alg. 2 lines 1-3. Returns (row_sizes, stats). Host-mediated:
     decides compression by the CF<=0.85 rule and sizes the expansion."""
     stats: dict = {}
@@ -315,37 +453,118 @@ def symbolic(a: CSR, b: CSR, compress: str = "auto"):
     stats["cf"], stats["cmrf"], stats["compressed"] = cf, cmrf, use_c
     if use_c and bc is not None:
         fm_c = max(int(jnp.sum(_per_slot(a, bc.row_nnz(), bc.indptr.shape[0] - 1))), 1)
-        cap = _round8(fm_c)
-        sizes = symbolic_compressed(a, bc, a.m, cap)
+        cap = round_capacity(fm_c, pad_policy)
+        sizes = symbolic_compressed(a, bc, a.m, cap, key_bound=-(-b.k // 32))
     else:
-        cap = _round8(fm)
+        cap = round_capacity(fm, pad_policy)
         sizes = symbolic_plain(a, b, cap)
     return sizes, stats
 
 
-def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto") -> SpgemmResult:
+def _repad_csr(a: CSR, nnz_cap: int) -> CSR:
+    """Re-pad a CSR's buffer capacity to a bucketed cap (live prefix kept).
+
+    Requires nnz(a) <= nnz_cap — only padding slots are ever dropped. Runs in
+    numpy on purpose: eager jnp slicing here would compile per *exact* input
+    capacity, defeating the bucketing (the host driver syncs for the
+    structure hash anyway, so the device->host copy is already paid).
+    """
+    if nnz_cap == a.nnz_cap:
+        return a
+    keep = min(nnz_cap, a.nnz_cap)
+    indices = np.zeros(nnz_cap, np.int32)
+    values = np.zeros(nnz_cap, np.asarray(a.values).dtype)
+    indices[:keep] = np.asarray(a.indices)[:keep]
+    values[:keep] = np.asarray(a.values)[:keep]
+    return CSR(indptr=a.indptr, indices=jnp.asarray(indices),
+               values=jnp.asarray(values), shape=a.shape)
+
+
+def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
+           pad_policy: str | None = None, plan_cache=None) -> SpgemmResult:
     """Full two-phase SpGEMM with the KKSPGEMM meta-algorithm's method choice
-    (see core/meta.py for the heuristics)."""
+    (see core/meta.py for the heuristics).
+
+    pad_policy: capacity bucketing for every static cap ("pow2" default;
+        "exact8" restores tight per-size caps — see core.meta.round_capacity).
+    plan_cache: None (default) uses the module-level LRU from
+        core/plan_cache.py; pass a PlanCache for an isolated cache, or False
+        to disable caching for this call. On a structure hit, the sparse path
+        skips the expansion and sort entirely (stats["cache"] == "hit").
+    compress: only affects the "dense" method's symbolic phase. The sparse
+        path needs the plain expansion for its numeric plan anyway, so
+        compression would add work, not save it — its stats (cf/cmrf/
+        compressed) are therefore only present on the dense path; use
+        ``symbolic()`` directly to inspect compression on any matrix.
+    """
     from repro.core.meta import choose_method  # cycle-free late import
+    from repro.core.plan_cache import default_plan_cache, structure_key
 
-    sizes, stats = symbolic(a, b, compress=compress)
-    nnz = int(jnp.sum(sizes))
-    nnz_cap = max(_round8(nnz), 8)
-    fm_cap = _round8(stats["fm"])
+    policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    stats: dict = {"pad_policy": policy}
     if method == "auto":
-        method = choose_method(a, b, stats)
+        method = choose_method(a, b, stats)  # shape-only heuristics
     stats["method"] = method
-    stats["nnz_c"] = nnz
+
     if method == "dense":
+        sizes, sym_stats = symbolic(a, b, compress=compress, pad_policy=policy)
+        stats.update(sym_stats)
+        fm_cap = round_capacity(sym_stats["fm"], policy)
+        stats["fm_cap"] = fm_cap
+        nnz = int(jnp.sum(sizes))
+        nnz_cap = round_capacity(nnz, policy)
+        stats["nnz_c"] = nnz
+        stats["nnz_cap"] = nnz_cap
+        stats["cache"] = "bypass"
         c = numeric_dense_acc(a, b, fm_cap, nnz_cap)
-        plan = None
-    else:  # "sparse" — sorted-segment (flat-parallel semantics)
-        c, plan = numeric_fresh(a, b, fm_cap, nnz_cap)
+        return SpgemmResult(c=c, plan=None, stats=stats)
+
+    # "sparse": single-expansion pipeline through the plan cache. Bucket the
+    # input buffer caps *before* any jitted work, so every array shape the
+    # jitted stages (including the f_m scalars) see is a bucket size — that's
+    # what lets same-bucket matrices share executables.
+    if plan_cache is None:
+        cache = default_plan_cache()
+    elif plan_cache is False:
+        cache = None
+    else:
+        cache = plan_cache
+    a = _repad_csr(a, round_capacity(max(int(a.indptr[-1]), 1), policy))
+    b = _repad_csr(b, round_capacity(max(int(b.indptr[-1]), 1), policy))
+    fm, maxrf = (int(x) for x in _fm_scalars(a, b))
+    stats["fm"] = fm
+    stats["maxrf"] = maxrf
+    fm_cap = round_capacity(fm, policy)
+    stats["fm_cap"] = fm_cap
+
+    key = None
+    if cache is not None:
+        key = structure_key(a, b, fm_cap, policy)
+        plan = cache.get(key)
+        if plan is not None:
+            values = numeric_reuse(plan, a.values, b.values)
+            c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
+                    shape=(a.m, b.k))
+            stats["cache"] = "hit"
+            stats["nnz_c"] = int(plan.indptr[-1])
+            stats["nnz_cap"] = plan.indices.shape[0]
+            return SpgemmResult(c=c, plan=plan, stats=stats)
+
+    sx = expand_and_sort(a, b, fm_cap)
+    nnz = int(jnp.sum(sx.row_sizes))
+    nnz_cap = round_capacity(nnz, policy)
+    plan = plan_from_sorted(sx, b.k, nnz_cap)
+    values = numeric_reuse(plan, a.values, b.values)
+    c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
+            shape=(a.m, b.k))
+    if cache is not None:
+        cache.put(key, plan)
+        stats["cache"] = "miss"
+    else:
+        stats["cache"] = "bypass"
+    stats["nnz_c"] = nnz
+    stats["nnz_cap"] = nnz_cap
     return SpgemmResult(c=c, plan=plan, stats=stats)
-
-
-def _round8(x: int) -> int:
-    return max(-(-int(x) // 8) * 8, 8)
 
 
 @jax.jit

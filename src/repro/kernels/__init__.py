@@ -12,15 +12,17 @@ Kernels:
   bsr_spgemm       — block-sparse (BSR) numeric phase: one MXU matmul per
                      grid step, plan-steered gathers (the MXU flagship)
 """
-from repro.kernels.spgemm_symbolic import spgemm_symbolic
-from repro.kernels.spgemm_numeric import spgemm_numeric
+from repro.kernels.spgemm_symbolic import spgemm_symbolic, spgemm_symbolic_bucketed
+from repro.kernels.spgemm_numeric import spgemm_numeric, spgemm_numeric_bucketed
 from repro.kernels.grouped_matmul import grouped_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.bsr_spgemm import bsr_spgemm_numeric, plan_bsr_numeric
 
 __all__ = [
     "spgemm_symbolic",
+    "spgemm_symbolic_bucketed",
     "spgemm_numeric",
+    "spgemm_numeric_bucketed",
     "grouped_matmul",
     "flash_attention",
     "bsr_spgemm_numeric",

@@ -18,8 +18,8 @@ from repro.core.compression import bitmask_rows
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.grouped_matmul import TM, grouped_matmul
-from repro.kernels.spgemm_numeric import spgemm_numeric
-from repro.kernels.spgemm_symbolic import spgemm_symbolic
+from repro.kernels.spgemm_numeric import spgemm_numeric_bucketed
+from repro.kernels.spgemm_symbolic import spgemm_symbolic_bucketed
 from repro.sparse.formats import CSR, csr_to_ell
 
 
@@ -27,24 +27,30 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def symbolic_rowsizes(a: CSR, b: CSR) -> jax.Array:
-    """Kernel-backed symbolic phase: (m,) row sizes of C = A*B."""
+def symbolic_rowsizes(a: CSR, b: CSR, *, pad_policy: str | None = None) -> jax.Array:
+    """Kernel-backed symbolic phase: (m,) row sizes of C = A*B. ELL widths go
+    through the same capacity buckets as the host driver, so similarly-sized
+    matrices reuse one compiled kernel."""
     ell = csr_to_ell(a)
     bm = bitmask_rows(b)
     pad = (-bm.shape[1]) % 128
     if pad:
         bm = jnp.pad(bm, ((0, 0), (0, pad)))
-    return spgemm_symbolic(ell.indices, ell.row_nnz, bm, interpret=_interpret())
+    return spgemm_symbolic_bucketed(
+        ell.indices, ell.row_nnz, bm, pad_policy=pad_policy,
+        interpret=_interpret(),
+    )
 
 
-def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array) -> jax.Array:
+def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
+                   pad_policy: str | None = None) -> jax.Array:
     """Kernel-backed numeric phase: ELL-layout values of C at the symbolic
-    structure ``c_idx``/``c_nnz`` (the Reuse entry point)."""
+    structure ``c_idx``/``c_nnz`` (the Reuse entry point). Widths bucketed."""
     ea = csr_to_ell(a)
     eb = csr_to_ell(b)
-    return spgemm_numeric(
+    return spgemm_numeric_bucketed(
         ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
-        c_idx, c_nnz, k=b.k, interpret=_interpret(),
+        c_idx, c_nnz, k=b.k, pad_policy=pad_policy, interpret=_interpret(),
     )
 
 

@@ -111,3 +111,34 @@ def spgemm_numeric(a_idx, a_val, a_nnz, b_idx, b_val, c_idx, c_nnz, *,
         interpret=interpret,
     )(a_idx, a_nnz, c_nnz, a_val, b_idx, b_val, c_idx)
     return out
+
+
+def _pad_width(x: jax.Array, width: int) -> jax.Array:
+    cur = x.shape[1]
+    return x if cur == width else jnp.pad(x, ((0, 0), (0, width - cur)))
+
+
+def spgemm_numeric_bucketed(a_idx, a_val, a_nnz, b_idx, b_val, c_idx, c_nnz, *,
+                            k: int, pad_policy: str | None = None,
+                            interpret: bool = False) -> jax.Array:
+    """``spgemm_numeric`` with ELL widths rA/rB/rC padded to capacity buckets.
+
+    Same bucketing contract as the host driver (core.meta.round_capacity):
+    each width rounds up to its x2 band so similarly-shaped problems share
+    one compiled kernel. Zero-padding preserves semantics — padded A slots
+    are masked by ``a_nnz``, padded B slots carry value 0 (the kernel's
+    contract), padded C slots are masked by ``c_nnz`` — and the output is
+    sliced back to the caller's rC.
+    """
+    from repro.core.meta import DEFAULT_PAD_POLICY, round_capacity
+
+    policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    r_c = c_idx.shape[1]
+    a_idx = _pad_width(a_idx, round_capacity(a_idx.shape[1], policy))
+    a_val = _pad_width(a_val, a_idx.shape[1])
+    b_idx = _pad_width(b_idx, round_capacity(b_idx.shape[1], policy))
+    b_val = _pad_width(b_val, b_idx.shape[1])
+    c_idx_p = _pad_width(c_idx, round_capacity(r_c, policy))
+    out = spgemm_numeric(a_idx, a_val, a_nnz, b_idx, b_val, c_idx_p, c_nnz,
+                         k=k, interpret=interpret)
+    return out[:, :r_c]

@@ -75,3 +75,24 @@ def spgemm_symbolic(a_idx: jax.Array, a_nnz: jax.Array, b_bitmask: jax.Array,
         interpret=interpret,
     )(a_idx, a_nnz, b_bitmask)
     return out[:, 0]
+
+
+def spgemm_symbolic_bucketed(a_idx: jax.Array, a_nnz: jax.Array,
+                             b_bitmask: jax.Array, *,
+                             pad_policy: str | None = None,
+                             interpret: bool = False) -> jax.Array:
+    """``spgemm_symbolic`` with the ELL width rA padded to a capacity bucket.
+
+    Same bucketing contract as the host driver (core.meta.round_capacity):
+    widths within a x2 band map to one grid shape, so similarly-sized
+    matrices share a single compiled kernel instead of each recompiling.
+    Padded slots sit beyond ``a_nnz`` and are masked inside the kernel.
+    """
+    from repro.core.meta import DEFAULT_PAD_POLICY, round_capacity
+
+    policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    r_a = a_idx.shape[1]
+    r_cap = round_capacity(r_a, policy)
+    if r_cap != r_a:
+        a_idx = jnp.pad(a_idx, ((0, 0), (0, r_cap - r_a)))
+    return spgemm_symbolic(a_idx, a_nnz, b_bitmask, interpret=interpret)

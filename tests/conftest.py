@@ -5,6 +5,26 @@ import jax
 import numpy as np
 import pytest
 
+try:
+    import hypothesis  # noqa: F401
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+# Modules whose property tests need hypothesis (see requirements-dev.txt):
+# without it they must be skipped at collection, not error at import.
+_HYPOTHESIS_MODULES = ["test_accumulators.py", "test_sparse.py", "test_spgemm.py"]
+collect_ignore = [] if _HAVE_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
+
+
+def pytest_report_header(config):
+    if not _HAVE_HYPOTHESIS:
+        return ("hypothesis not installed — skipping "
+                + ", ".join(_HYPOTHESIS_MODULES)
+                + " (pip install -r requirements-dev.txt)")
+    return None
+
 
 @pytest.fixture(autouse=True)
 def _seed():

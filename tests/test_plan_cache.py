@@ -1,0 +1,230 @@
+"""Single-expansion pipeline, capacity bucketing, and plan-cache tests.
+
+Deliberately hypothesis-free: these must run on the bare container (see
+tests/conftest.py). Covers the PR 2 contracts:
+  * packed single-key sort == lexsort ordering, exactly
+  * one expansion + one sort per fresh spgemm() (trace-count fixture)
+  * same-bucket structures share compiled executables (zero new traces)
+  * Reuse through the cache matches the kernels/ref.py dense reference,
+    including cancellation to explicit zeros
+  * LRU bound + eviction accounting
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PlanCache,
+    default_plan_cache,
+    numeric_reuse,
+    reset_trace_counts,
+    round_capacity,
+    spgemm,
+    structure_key,
+)
+from repro.core.spgemm import TRACE_COUNTS, _single_sort_order
+from repro.kernels import ref
+from repro.sparse import CSR, dense_spgemm_oracle, random_csr
+from repro.sparse.formats import csr_to_ell
+
+
+def _with_values(mat: CSR, seed: int) -> CSR:
+    """Same structure, fresh random values (the Reuse case's input)."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.standard_normal(mat.nnz_cap), jnp.float32)
+    return CSR(mat.indptr, mat.indices, vals, mat.shape)
+
+
+def test_round_capacity_policies():
+    assert round_capacity(1, "exact8") == 8
+    assert round_capacity(9, "exact8") == 16
+    assert round_capacity(16, "exact8") == 16
+    assert round_capacity(1, "pow2") == 8
+    assert round_capacity(8, "pow2") == 8
+    assert round_capacity(9, "pow2") == 16
+    assert round_capacity(100, "pow2") == 128
+    assert round_capacity(128, "pow2") == 128
+    with pytest.raises(ValueError):
+        round_capacity(4, "exact")
+
+
+@pytest.mark.parametrize("m,k", [(16, 8), (37, 53), (1, 1)])
+def test_packed_sort_matches_lexsort(m, k):
+    rng = np.random.default_rng(m * 100 + k)
+    n = 200
+    rows = jnp.asarray(rng.integers(0, m + 1, n), jnp.int32)  # m = pad sentinel
+    cols = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    got = _single_sort_order(rows, cols, m, k)
+    want = jnp.lexsort((cols, rows))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_sort_fallback_wide_keyspace():
+    """(m+1)*k overflows int32 -> the fused two-key lax.sort path; ordering
+    must still match lexsort exactly."""
+    m, k = 1 << 17, 1 << 17
+    rng = np.random.default_rng(7)
+    n = 500
+    rows = jnp.asarray(rng.integers(0, m + 1, n), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    got = _single_sort_order(rows, cols, m, k)
+    want = jnp.lexsort((cols, rows))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fresh_spgemm_single_expansion_single_sort():
+    """Acceptance: a fresh spgemm() traces exactly one product expansion and
+    one sort stage; a repeat with new values hits the cache with zero new
+    traces (== zero recompiles)."""
+    jax.clear_caches()
+    reset_trace_counts()
+    cache = PlanCache()
+    a = random_csr(17, 19, 2.0, 3)
+    b = random_csr(19, 23, 2.0, 4)
+    res = spgemm(a, b, method="sparse", plan_cache=cache)
+    assert res.stats["cache"] == "miss"
+    assert TRACE_COUNTS["expand_products"] == 1
+    assert TRACE_COUNTS["expand_and_sort"] == 1
+    assert TRACE_COUNTS["_symbolic_sorted"] == 0  # no separate symbolic sort
+    assert TRACE_COUNTS["plan_from_sorted"] == 1
+    np.testing.assert_allclose(
+        np.asarray(res.c.to_dense()), dense_spgemm_oracle(a, b),
+        rtol=1e-4, atol=1e-4,
+    )
+
+    baseline = dict(TRACE_COUNTS)
+    a2 = _with_values(a, 11)
+    res2 = spgemm(a2, b, method="sparse", plan_cache=cache)
+    assert res2.stats["cache"] == "hit"
+    assert dict(TRACE_COUNTS) == baseline  # zero recompiles on the Reuse path
+    np.testing.assert_allclose(
+        np.asarray(res2.c.to_dense()), dense_spgemm_oracle(a2, b),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_same_bucket_shares_executable():
+    """Two different structures whose sizes land in the same x2 capacity
+    buckets must not trigger any new traces on the second call."""
+    jax.clear_caches()
+    reset_trace_counts()
+    cache = PlanCache()
+    a1, b1 = random_csr(64, 64, 5.0, 1), random_csr(64, 64, 5.0, 2)
+    a2, b2 = random_csr(64, 64, 5.0, 5), random_csr(64, 64, 5.0, 6)
+    r1 = spgemm(a1, b1, method="sparse", plan_cache=cache)
+    # construction precondition: both multiplies sit in the same buckets
+    r2 = spgemm(a2, b2, method="sparse", plan_cache=cache)
+    assert r2.stats["cache"] == "miss"  # different structure ...
+    assert r2.stats["fm_cap"] == r1.stats["fm_cap"]
+    assert r2.stats["nnz_cap"] == r1.stats["nnz_cap"]
+    np.testing.assert_allclose(
+        np.asarray(r2.c.to_dense()), dense_spgemm_oracle(a2, b2),
+        rtol=1e-4, atol=1e-4,
+    )
+    # ... yet zero new traces: the bucketed executables are shared.
+    baseline = dict(TRACE_COUNTS)
+    a3, b3 = random_csr(64, 64, 5.0, 8), random_csr(64, 64, 5.0, 9)
+    r3 = spgemm(a3, b3, method="sparse", plan_cache=cache)
+    assert r3.stats["fm_cap"] == r1.stats["fm_cap"]
+    assert dict(TRACE_COUNTS) == baseline
+
+
+def test_cache_reuse_matches_kernel_ref_after_value_mutation():
+    """Reuse path through the plan cache vs kernels/ref.py dense-accumulator
+    reference, with mutated values."""
+    cache = PlanCache()
+    a = random_csr(30, 40, 3.0, 7)
+    b = random_csr(40, 35, 2.0, 8)
+    r1 = spgemm(a, b, method="sparse", plan_cache=cache)
+    assert r1.stats["cache"] == "miss"
+    a2, b2 = _with_values(a, 21), _with_values(b, 22)
+    r2 = spgemm(a2, b2, method="sparse", plan_cache=cache)
+    assert r2.stats["cache"] == "hit"
+
+    ea, eb = csr_to_ell(a2), csr_to_ell(b2)
+    r_pad = max(int(jnp.max(r2.c.row_nnz())), 1)
+    ec = csr_to_ell(r2.c, r_pad=r_pad)
+    want = ref.spgemm_numeric_ref(
+        ea.indices, ea.values, eb.indices, eb.values, ec.indices, ec.row_nnz,
+        b.k,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ec.values), np.asarray(want), rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_cache_reuse_keeps_explicit_zeros_on_cancellation():
+    """Cancellation through the cached plan must keep the symbolic slot as an
+    explicit zero (occupancy, not value != 0 — the paper's accumulators)."""
+    cache = PlanCache()
+    a = CSR.from_dense(np.array([[1.0, 1.0]], np.float32))
+    b1 = CSR.from_dense(np.array([[1.0], [1.0]], np.float32))
+    r1 = spgemm(a, b1, method="sparse", plan_cache=cache)
+    assert r1.stats["cache"] == "miss"
+    assert int(r1.c.nnz()) == 1 and float(r1.c.values[0]) == pytest.approx(2.0)
+    b2 = CSR(b1.indptr, b1.indices, jnp.asarray([1.0, -1.0], jnp.float32),
+             b1.shape)
+    r2 = spgemm(a, b2, method="sparse", plan_cache=cache)
+    assert r2.stats["cache"] == "hit"
+    assert int(r2.c.nnz()) == 1  # structurally present
+    assert abs(float(r2.c.values[0])) < 1e-6  # numerically zero
+
+
+def test_lru_eviction_bound():
+    cache = PlanCache(capacity=2)
+    mats = [
+        (random_csr(12, 12, 2.0, s), random_csr(12, 12, 2.0, s + 50))
+        for s in (1, 2, 3)
+    ]
+    for a, b in mats:
+        assert spgemm(a, b, method="sparse", plan_cache=cache).stats["cache"] == "miss"
+    assert len(cache) == 2
+    assert cache.evictions == 1
+    # oldest (mats[0]) was evicted; newest (mats[2]) still resident
+    a0, b0 = mats[0]
+    assert spgemm(a0, b0, method="sparse", plan_cache=cache).stats["cache"] == "miss"
+    a2, b2 = mats[2]
+    assert spgemm(a2, b2, method="sparse", plan_cache=cache).stats["cache"] == "hit"
+
+
+def test_default_cache_used_by_public_entry_point():
+    """spgemm() with no cache argument reuses the module-level cache."""
+    a = random_csr(21, 27, 2.0, 33)
+    b = random_csr(27, 31, 2.0, 34)
+    default_plan_cache().clear()
+    r1 = spgemm(a, b, method="sparse")
+    r2 = spgemm(_with_values(a, 1), b, method="sparse")
+    assert r1.stats["cache"] == "miss"
+    assert r2.stats["cache"] == "hit"
+    assert default_plan_cache().stats()["hits"] >= 1
+    # disabling the cache bypasses it entirely
+    r3 = spgemm(a, b, method="sparse", plan_cache=False)
+    assert r3.stats["cache"] == "bypass"
+
+
+def test_structure_key_sensitivity():
+    a = random_csr(10, 10, 2.0, 1)
+    b = random_csr(10, 10, 2.0, 2)
+    k0 = structure_key(a, b, 64, "pow2")
+    assert structure_key(a, b, 64, "pow2") == k0  # deterministic
+    assert structure_key(a, b, 128, "pow2") != k0  # fm bucket matters
+    assert structure_key(a, b, 64, "exact8") != k0  # policy matters
+    assert structure_key(b, a, 64, "pow2") != k0  # operand order matters
+    a2 = _with_values(a, 9)
+    assert structure_key(a2, b, 64, "pow2") == k0  # values don't matter
+
+
+def test_plan_survives_for_manual_numeric_reuse():
+    """The cached plan is the same object callers can drive by hand — the
+    pre-cache API keeps working on top of the cache."""
+    cache = PlanCache()
+    a = random_csr(18, 22, 2.0, 41)
+    b = random_csr(22, 16, 2.0, 42)
+    res = spgemm(a, b, method="sparse", plan_cache=cache)
+    a2 = _with_values(a, 5)
+    vals = numeric_reuse(res.plan, a2.values, b.values)
+    want = dense_spgemm_oracle(a2, b)
+    c2 = CSR(res.c.indptr, res.c.indices, vals, res.c.shape)
+    np.testing.assert_allclose(np.asarray(c2.to_dense()), want,
+                               rtol=1e-4, atol=1e-4)
