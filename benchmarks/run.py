@@ -9,18 +9,24 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        slowdown vs best)
   bench_compression  — Table 3 / §4.3: CF, CMRF, symbolic time +/- compression
   bench_reuse        — Fig 6(d)/(f): NoReuse vs Reuse numeric phase
+  bench_reuse_batched — batched reuse replay: ReuseExecutor.apply_batched
+                       (one dispatch per batch) vs a per-call numeric_reuse
+                       loop; throughput in multiplies/s
   bench_compile      — recompile counts + plan-cache hit rate: same-bucket
                        structures share executables, repeats hit the cache
   bench_fm_groups    — Fig 8: meta-vs-fixed speedup grouped by f_m
   bench_distributed  — §multi-pod: 1-D row-wise SpGEMM scaling terms
   bench_train_smoke  — LM substrate: tokens/s of a smoke train step
 
-``--quick`` runs a CI-sized smoke subset (2 suite cases, compile + reuse
-benches only).
+``--quick`` runs a CI-sized smoke subset (2 suite cases; compile, reuse and
+batched-reuse benches only). ``--json PATH`` additionally writes the rows as
+machine-readable JSON (exact derived metric values; the CSV column is a
+rendering of them) so CI can archive a BENCH_*.json trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -30,6 +36,7 @@ import numpy as np
 from benchmarks.suite import suite
 from repro.core import (
     PlanCache,
+    ReuseExecutor,
     compress_matrix,
     compression_decision,
     numeric_reuse,
@@ -43,12 +50,23 @@ from repro.core.compression import flops_stats
 from repro.sparse import CSR, random_csr
 
 ROWS: list[str] = []
+RESULTS: list[dict] = []  # structured mirror of ROWS for --json
 CASES: list = []  # populated by main(); benches iterate this, not suite()
 
 
-def emit(name: str, us: float, derived: str = ""):
-    row = f"{name},{us:.1f},{derived}"
+def _fmt_val(v) -> str:
+    return f"{v:.6g}" if isinstance(v, float) else str(v)
+
+
+def emit(name: str, us: float, derived: dict | None = None):
+    """Record one result row. ``derived`` holds the exact metric values; the
+    CSV display string is rendered from it (not the other way around), so
+    --json archives full precision."""
+    derived = derived or {}
+    text = ";".join(f"{k}={_fmt_val(v)}" for k, v in derived.items())
+    row = f"{name},{us:.1f},{text}"
     ROWS.append(row)
+    RESULTS.append({"name": name, "us_per_call": us, "derived": derived})
     print(row, flush=True)
 
 
@@ -90,7 +108,7 @@ def bench_methods():
         results[name] = (fm, per_method)
         for meth, us in per_method.items():
             gflops = 2 * fm / (us * 1e-6) / 1e9
-            emit(f"methods/{name}/{meth}", us, f"gflops={gflops:.3f};fm={fm}")
+            emit(f"methods/{name}/{meth}", us, {"gflops": gflops, "fm": fm})
     return results
 
 
@@ -108,7 +126,7 @@ def bench_profile(results):
                 max_slow[m] = max(max_slow[m], per[m] / best)
     for m in methods:
         emit(f"profile/{m}", 0.0,
-             f"wins={wins[m]};max_slowdown={max_slow[m]:.2f}")
+             {"wins": wins[m], "max_slowdown": max_slow[m]})
 
 
 def bench_compression():
@@ -126,8 +144,8 @@ def bench_compression():
         us_comp, _ = timeit(
             lambda: symbolic_compressed(a, bc, a.m, cap_c))
         emit(f"compression/{name}", us_comp,
-             f"cf={cf:.2f};cmrf={cmrf:.2f};applied={int(use)};"
-             f"plain_us={us_plain:.0f};speedup={us_plain / us_comp:.2f}")
+             {"cf": cf, "cmrf": cmrf, "applied": int(use),
+              "plain_us": us_plain, "speedup": us_plain / us_comp})
 
 
 def bench_reuse():
@@ -143,7 +161,42 @@ def bench_reuse():
             lambda: numeric_reuse(res.plan, a.values, b.values))
         noreuse = us_sym + us_fresh
         emit(f"reuse/{name}", us_reuse,
-             f"noreuse_us={noreuse:.0f};speedup={noreuse / us_reuse:.2f}")
+             {"noreuse_us": noreuse, "speedup": noreuse / us_reuse})
+
+
+def bench_reuse_batched(batches=(8, 32)):
+    """Batched reuse replay (the executor's acceptance benchmark).
+
+    Per case and batch size: stack ``batch`` value sets on one pinned plan
+    and compare ONE ``ReuseExecutor.apply_batched`` dispatch against a
+    per-call ``numeric_reuse`` loop. Reports both in multiplies/s — the
+    north-star serving metric. A small dispatch-bound case rides along so
+    the dispatch-amortization effect is visible even when the suite cases
+    are compute-bound.
+    """
+    small = random_csr(256, 256, 4.0, 123)
+    cases = [("rand256_AxA", small, small)] + list(CASES[:2])
+    for name, a, b in cases:
+        ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+        rng = np.random.default_rng(0)
+        for batch in batches:
+            a_stack = jnp.asarray(
+                rng.standard_normal((batch, a.nnz_cap)), jnp.float32)
+            b_stack = jnp.asarray(
+                rng.standard_normal((batch, b.nnz_cap)), jnp.float32)
+            # pre-split so the loop pays dispatch, not slicing
+            a_list = [jnp.asarray(a_stack[i]) for i in range(batch)]
+            b_list = [jnp.asarray(b_stack[i]) for i in range(batch)]
+
+            us_batched, _ = timeit(lambda: ex.apply_batched(a_stack, b_stack))
+            us_loop, _ = timeit(
+                lambda: [numeric_reuse(ex.plan, av, bv)
+                         for av, bv in zip(a_list, b_list)])
+            emit(f"reuse_batched/{name}/b{batch}", us_batched,
+                 {"loop_us": us_loop,
+                  "speedup": us_loop / us_batched,
+                  "mult_per_s": batch / (us_batched * 1e-6),
+                  "loop_mult_per_s": batch / (us_loop * 1e-6)})
 
 
 def bench_compile():
@@ -184,14 +237,16 @@ def bench_compile():
 
     cs = cache.stats()
     emit("compile/fresh", us1,
-         f"traces={traces_first};expansions={TRACE_COUNTS['expand_and_sort']};"
-         f"cache={res1.stats['cache']}")
+         {"traces": traces_first,
+          "expansions": TRACE_COUNTS["expand_and_sort"],
+          "cache": res1.stats["cache"]})
     emit("compile/same_bucket", us2,
-         f"new_traces={traces_same_bucket};cache={res2.stats['cache']}")
+         {"new_traces": traces_same_bucket, "cache": res2.stats["cache"]})
     emit("compile/cache_hit", us3,
-         f"new_traces={traces_hit};cache={res3.stats['cache']}")
+         {"new_traces": traces_hit, "cache": res3.stats["cache"]})
     emit("compile/cache", 0.0,
-         f"hits={cs['hits']};misses={cs['misses']};hit_rate={cs['hit_rate']:.2f}")
+         {"hits": cs["hits"], "misses": cs["misses"],
+          "hit_rate": cs["hit_rate"]})
 
 
 def bench_fm_groups(results):
@@ -206,7 +261,7 @@ def bench_fm_groups(results):
             sp.append(base / per["kkspgemm"])
         gm = float(np.exp(np.mean(np.log(np.maximum(sp, 1e-9)))))
         emit(f"fm_groups/{label}", 0.0,
-             f"geomean_speedup_vs_sparse={gm:.3f};n={len(grp)}")
+             {"geomean_speedup_vs_sparse": gm, "n": len(grp)})
 
 
 def bench_distributed():
@@ -221,7 +276,7 @@ def bench_distributed():
         us_dist, _ = timeit(
             lambda: distributed_spgemm(a, b, mesh).values)
         emit(f"distributed/{name}", us_dist,
-             f"local_us={us_local:.0f};overhead={us_dist / us_local:.2f}")
+             {"local_us": us_local, "overhead": us_dist / us_local})
 
 
 def bench_train_smoke():
@@ -247,14 +302,19 @@ def bench_train_smoke():
         us, _ = timeit(lambda: run(params, opt))
         toks = 4 * 64
         emit(f"train_smoke/{arch}", us,
-             f"tokens_per_s={toks / (us * 1e-6):.0f}")
+             {"tokens_per_s": toks / (us * 1e-6)})
 
 
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
         "--quick", action="store_true",
-        help="CI smoke subset: 2 suite cases, compile + reuse benches only",
+        help="CI smoke subset: 2 suite cases; compile, reuse and "
+             "batched-reuse benches only",
+    )
+    parser.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write results as machine-readable JSON to PATH",
     )
     args = parser.parse_args(argv)
     CASES[:] = list(suite())[:2] if args.quick else list(suite())
@@ -262,16 +322,30 @@ def main(argv: list[str] | None = None) -> None:
     if args.quick:
         bench_compile()
         bench_reuse()
+        bench_reuse_batched()
     else:
         results = bench_methods()
         bench_profile(results)
         bench_compression()
         bench_reuse()
+        bench_reuse_batched()
         bench_compile()
         bench_fm_groups(results)
         bench_distributed()
         bench_train_smoke()
     print(f"# {len(ROWS)} rows")
+    if args.json:
+        payload = {
+            "schema": 1,
+            "quick": bool(args.quick),
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "rows": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(RESULTS)} rows)")
 
 
 if __name__ == "__main__":

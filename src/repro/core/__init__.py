@@ -5,6 +5,8 @@ Public API:
     symbolic          — phase 1 (row sizes; compression-aware)
     numeric_fresh     — phase 2, first run (structure + values + reuse plan)
     numeric_reuse     — phase 2, Reuse case (new values, same structure)
+    ReuseExecutor     — pinned-plan replay engine (single/batched dispatch)
+    spgemm_grouped    — mixed-structure batch: one dispatch per structure
     compress_matrix   — §3.2 bit compression
     distributed_spgemm — 1-D row-wise SpGEMM over a device mesh
     round_capacity    — capacity bucketing policy ("exact8" / "pow2")
@@ -22,6 +24,7 @@ from repro.core.spgemm import (
     numeric_reuse,
     plan_from_sorted,
     reset_trace_counts,
+    resolve_plan,
     spgemm,
     symbolic,
     symbolic_compressed,
@@ -46,7 +49,19 @@ from repro.core.meta import (
     estimate_ars,
     round_capacity,
 )
-from repro.core.plan_cache import PlanCache, default_plan_cache, structure_key
+from repro.core.plan_cache import (
+    HASH_COUNTS,
+    PlanCache,
+    default_plan_cache,
+    reset_hash_counts,
+    structure_key,
+)
+from repro.core.executor import (
+    DISPATCH_COUNTS,
+    ReuseExecutor,
+    reset_dispatch_counts,
+    spgemm_grouped,
+)
 from repro.core.distributed import (
     ShardedCSR,
     concat_csr_shards,
@@ -66,6 +81,7 @@ __all__ = [
     "expand_products",
     "plan_from_sorted",
     "reset_trace_counts",
+    "resolve_plan",
     "host_fm_cap",
     "numeric_dense_acc",
     "numeric_fresh",
@@ -90,8 +106,14 @@ __all__ = [
     "estimate_ars",
     "round_capacity",
     "PlanCache",
+    "HASH_COUNTS",
     "default_plan_cache",
+    "reset_hash_counts",
     "structure_key",
+    "DISPATCH_COUNTS",
+    "ReuseExecutor",
+    "reset_dispatch_counts",
+    "spgemm_grouped",
     "ShardedCSR",
     "concat_csr_shards",
     "dist_numeric",

@@ -1,0 +1,254 @@
+"""High-throughput reuse engine: pinned plans, batched replay, grouping.
+
+The paper's Reuse case pays for the two-phase split only if the numeric
+replay is cheap to *dispatch*, not just cheap to compute: Nagasaka et al.
+(arXiv:1804.01698) show the numeric phase is bandwidth-bound, so per-call
+host overheads (structure hashing, cache probes, one XLA dispatch per
+multiply) dominate exactly the workloads the paper targets — multigrid
+setup, graph analytics with changing weights, now at serving rates.
+
+``ReuseExecutor`` closes that gap in three steps:
+
+  * **pin**: the plan is hashed and resolved once at construction (one
+    ``structure_key`` call, ever — ``plan_cache.HASH_COUNTS`` proves it);
+  * **replay**: ``apply(a_values, b_values)`` is a single jitted dispatch of
+    the precomposed v2 plan (two gathers + one sorted segment-sum), with an
+    optional donating variant for serving loops that discard their inputs;
+  * **batch**: ``apply_batched`` vmaps the replay over stacked value arrays
+    ``(batch, nnz_cap)`` — same structure, new values, ONE XLA dispatch for
+    the whole batch instead of ``batch`` round-trips through the runtime.
+
+``spgemm_grouped`` extends this to mixed batches: multiplies are grouped by
+``plan_cache.structure_key`` (one hash per multiply, the unavoidable
+minimum — input prep and plan resolution share ``spgemm()``'s code path)
+and each structure group becomes one batched dispatch.
+
+Backends: ``backend="xla"`` (the default that ``"auto"`` resolves to)
+replays through ``numeric_reuse``; ``backend="pallas"`` opts into the
+``kernels/segsum_reuse`` flat-parallel TPU kernel (``interpret=True``
+off-TPU). The Pallas kernel is explicit opt-in — not what ``"auto"`` picks —
+until it has real-TPU compile coverage (CI only exercises interpret mode),
+and it accumulates in f32, so f64 operands route back to XLA. Batched replay
+always uses the XLA path — it is the vmap-friendly formulation, and one
+fused dispatch is the point of batching.
+"""
+from __future__ import annotations
+
+from collections import Counter, OrderedDict
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meta import DEFAULT_PAD_POLICY
+from repro.core.plan_cache import default_plan_cache, structure_key
+from repro.core.spgemm import (
+    SpgemmPlan,
+    _note_trace,
+    numeric_reuse,
+    prepare_sparse_inputs,
+    resolve_plan,
+    spgemm,
+)
+from repro.sparse.formats import CSR
+
+BACKENDS = ("auto", "xla", "pallas")
+
+# Dispatch telemetry: counts *calls* (not traces — that's TRACE_COUNTS), so
+# tests can assert grouping really issues one batched dispatch per structure.
+DISPATCH_COUNTS: Counter = Counter()
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    # "auto" stays on XLA even on TPU: the Pallas kernel is explicit opt-in
+    # until it has real-TPU compile coverage (tests only run interpret mode).
+    return "xla" if backend == "auto" else backend
+
+
+def _replay(plan: SpgemmPlan, a_values, b_values, backend: str, interpret: bool):
+    acc_dtype = jnp.result_type(a_values, b_values)
+    if (backend == "pallas" and jnp.issubdtype(acc_dtype, jnp.floating)
+            and acc_dtype.itemsize <= 4):
+        from repro.kernels.segsum_reuse import segsum_reuse  # lazy: kernels dep
+
+        return segsum_reuse(plan, a_values, b_values, interpret=interpret)
+    # XLA path — also the fallback for f64 (the Pallas kernel accumulates in
+    # f32, which would halve double precision) and for integer dtypes (f32
+    # rounding above 2^24 would break integer exactness).
+    return numeric_reuse(plan, a_values, b_values)
+
+
+def _apply_impl(plan, a_values, b_values, backend, interpret):
+    _note_trace("executor_apply")
+    return _replay(plan, a_values, b_values, backend, interpret)
+
+
+_apply = jax.jit(_apply_impl, static_argnames=("backend", "interpret"))
+# serving-loop variants: per-operand buffer donation, so a loop with one
+# fixed operand (multigrid's P) can donate only the per-step values
+_apply_donated = {
+    (True, True): jax.jit(_apply_impl, static_argnames=("backend", "interpret"),
+                          donate_argnums=(1, 2)),
+    (True, False): jax.jit(_apply_impl, static_argnames=("backend", "interpret"),
+                           donate_argnums=(1,)),
+    (False, True): jax.jit(_apply_impl, static_argnames=("backend", "interpret"),
+                           donate_argnums=(2,)),
+}
+
+
+@partial(jax.jit, static_argnames=("a_axis", "b_axis"))
+def _apply_batched(plan, a_values, b_values, a_axis, b_axis):
+    _note_trace("executor_apply_batched")
+    return jax.vmap(
+        lambda av, bv: numeric_reuse(plan, av, bv), in_axes=(a_axis, b_axis)
+    )(a_values, b_values)
+
+
+class ReuseExecutor:
+    """A pinned ``SpgemmPlan`` exposed as a replay engine.
+
+    Construction is the only host-side work: from then on every ``apply`` /
+    ``apply_batched`` is a pure jitted dispatch — zero structure hashing,
+    zero cache probes, zero retraces (for fixed operand shapes/dtypes).
+    """
+
+    def __init__(self, plan: SpgemmPlan, *, backend: str = "auto",
+                 interpret: bool | None = None):
+        if plan is None:
+            raise ValueError(
+                "ReuseExecutor needs a SpgemmPlan; got None — the dense "
+                "spgemm method returns plan=None (no Reuse path), build the "
+                "plan with method='sparse'"
+            )
+        self.plan = plan
+        self.backend = _resolve_backend(backend)
+        # Pallas only lowers on TPU; everywhere else run it interpreted.
+        self.interpret = (
+            jax.default_backend() != "tpu" if interpret is None else interpret
+        )
+
+    @classmethod
+    def from_matrices(cls, a: CSR, b: CSR, *, pad_policy: str | None = None,
+                      plan_cache=None, backend: str = "auto",
+                      interpret: bool | None = None) -> "ReuseExecutor":
+        """Build (or fetch from the plan cache) the plan for ``a @ b`` and pin
+        it. This is the one and only structure hash in the executor's life."""
+        res = spgemm(a, b, method="sparse", pad_policy=pad_policy,
+                     plan_cache=plan_cache)
+        return cls(res.plan, backend=backend, interpret=interpret)
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self.plan.shape)
+
+    @property
+    def nnz_cap(self) -> int:
+        return self.plan.indices.shape[0]
+
+    @property
+    def fm_cap(self) -> int:
+        return self.plan.seg_ids.shape[0]
+
+    def apply(self, a_values: jax.Array, b_values: jax.Array, *,
+              donate: bool | str = False) -> jax.Array:
+        """Replay the pinned plan on new operand values: (nnz_cap,) C values.
+
+        donate: ``True``/``"both"`` donates both value buffers to the
+        dispatch; ``"a"``/``"b"`` donates only that operand — use these when
+        the other operand is fixed across calls (multigrid's P), since a
+        donated buffer must not be passed again. Donation is permission, not
+        a guarantee: XLA only aliases a donated operand into the output when
+        their shapes/dtypes line up (operand ``nnz_cap`` == plan ``nnz_cap``
+        bucket), and warns-and-copies otherwise — leave it off unless the
+        buckets match.
+        """
+        DISPATCH_COUNTS["apply"] += 1
+        if donate:
+            key = {True: (True, True), "both": (True, True),
+                   "a": (True, False), "b": (False, True)}.get(donate)
+            if key is None:
+                raise ValueError(
+                    f"donate must be bool, 'a', 'b' or 'both'; got {donate!r}")
+            fn = _apply_donated[key]
+        else:
+            fn = _apply
+        return fn(self.plan, a_values, b_values,
+                  backend=self.backend, interpret=self.interpret)
+
+    def apply_batched(self, a_values: jax.Array, b_values: jax.Array) -> jax.Array:
+        """Replay over stacked values in ONE dispatch: (batch, nnz_cap).
+
+        Either operand may be stacked ``(batch, operand_nnz_cap)`` or shared
+        unbatched ``(operand_nnz_cap,)`` (e.g. a fixed prolongator P against
+        a batch of A values). At least one side must be stacked.
+        """
+        DISPATCH_COUNTS["apply_batched"] += 1
+        a_axis = 0 if a_values.ndim == 2 else None
+        b_axis = 0 if b_values.ndim == 2 else None
+        if a_axis is None and b_axis is None:
+            raise ValueError(
+                "apply_batched needs at least one stacked (batch, nnz) operand; "
+                "use apply() for a single replay"
+            )
+        return _apply_batched(self.plan, a_values, b_values,
+                              a_axis=a_axis, b_axis=b_axis)
+
+    def to_csr(self, values: jax.Array) -> CSR:
+        """Wrap one replay's values in the plan's C structure."""
+        return CSR(indptr=self.plan.indptr, indices=self.plan.indices,
+                   values=values, shape=self.shape)
+
+
+def spgemm_grouped(pairs: Sequence[tuple[CSR, CSR]], *,
+                   pad_policy: str | None = None, plan_cache=None,
+                   backend: str = "auto",
+                   interpret: bool | None = None) -> list[CSR]:
+    """Mixed-structure batch: group by structure, one dispatch per group.
+
+    Each (A, B) multiply is hashed once with ``plan_cache.structure_key``;
+    multiplies sharing a structure (and operand value dtypes — stacking must
+    not promote a mixed group) are stacked and replayed through a single
+    ``apply_batched`` dispatch (plans come from — and land in — the plan
+    cache, so repeated batches skip expansion entirely). Results come back
+    in input order as CSR matrices sharing their group's structure arrays.
+    """
+    policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    if plan_cache is None:
+        cache = default_plan_cache()
+    elif plan_cache is False:
+        cache = None
+    else:
+        cache = plan_cache
+
+    prepared: list[tuple[CSR, CSR, int]] = []
+    groups: OrderedDict[tuple, list[int]] = OrderedDict()
+    for a, b in pairs:
+        a, b, _, _, fm_cap = prepare_sparse_inputs(a, b, policy)
+        skey = structure_key(a, b, fm_cap, policy)  # the one hash per multiply
+        # dtypes join the grouping (not the plan key): jnp.stack on a mixed
+        # group would silently promote, diverging from the per-call contract
+        gkey = (skey, str(a.values.dtype), str(b.values.dtype))
+        groups.setdefault(gkey, []).append(len(prepared))
+        prepared.append((a, b, fm_cap))
+
+    results: list[CSR | None] = [None] * len(prepared)
+    for (skey, _, _), idxs in groups.items():
+        a0, b0, fm_cap = prepared[idxs[0]]
+        plan, _ = resolve_plan(a0, b0, fm_cap, policy, cache, key=skey)
+        ex = ReuseExecutor(plan, backend=backend, interpret=interpret)
+        if len(idxs) == 1:
+            results[idxs[0]] = ex.to_csr(ex.apply(a0.values, b0.values))
+            continue
+        a_stack = jnp.stack([prepared[i][0].values for i in idxs])
+        b_stack = jnp.stack([prepared[i][1].values for i in idxs])
+        vals = ex.apply_batched(a_stack, b_stack)
+        for j, i in enumerate(idxs):
+            results[i] = ex.to_csr(vals[j])
+    return results

@@ -24,10 +24,19 @@ from __future__ import annotations
 
 import hashlib
 import threading
-from collections import OrderedDict
+from collections import Counter, OrderedDict
 from typing import Any
 
 import numpy as np
+
+# Hash telemetry: ``structure_key`` bumps this on every call. The executor's
+# contract ("one structure hash, ever — zero re-hashes on replay") is asserted
+# against these counts, mirroring spgemm.TRACE_COUNTS for recompiles.
+HASH_COUNTS: Counter = Counter()
+
+
+def reset_hash_counts() -> None:
+    HASH_COUNTS.clear()
 
 
 class PlanCache:
@@ -37,10 +46,11 @@ class PlanCache:
     from multiple threads). Tracks hit/miss/eviction counters so benchmarks
     can report cache efficiency alongside recompile counts.
 
-    The bound is entry-count, not bytes: a plan holds five fm_cap-length
-    arrays, so one entry for a multiply with f_m ~ 1e7 pins ~200 MB of
-    device memory until evicted. Size the capacity (or pass a dedicated
-    PlanCache to spgemm) accordingly for large-matrix workloads.
+    The bound is entry-count, not bytes: a v2 plan holds three fm_cap-length
+    int32 arrays (seg_ids + precomposed slot maps), so one entry for a
+    multiply with f_m ~ 1e7 pins ~120 MB of device memory until evicted.
+    Size the capacity (or pass a dedicated PlanCache to spgemm) accordingly
+    for large-matrix workloads.
     """
 
     def __init__(self, capacity: int = 16):
@@ -103,6 +113,7 @@ def structure_key(a, b, fm_cap: int, pad_policy: str) -> str:
     same compiled executables: live structure, shapes, capacities, and the
     bucketing that sized them all feed the digest.
     """
+    HASH_COUNTS["structure_key"] += 1
     h = hashlib.blake2b(digest_size=16)
     for mat in (a, b):
         indptr = np.asarray(mat.indptr)

@@ -26,8 +26,17 @@ stages are:
 
   ``expand_and_sort``  (jit, static fm_cap)  -> sorted products + row sizes
   host                                       -> nnz(C), bucketed nnz_cap
-  ``plan_from_sorted`` (jit, static nnz_cap) -> SpgemmPlan
+  ``plan_from_sorted`` (jit, static nnz_cap) -> SpgemmPlan (v2, precomposed)
   ``numeric_reuse``    (jit)                 -> C values
+
+The plan is *precomposed* (v2): ``plan_from_sorted`` folds the sort
+permutation into the slot maps at build time (``a_slot_s = a_slot[order]``,
+``b_slot_s = b_slot[order]``) and folds validity into sentinel ``seg_ids``
+(padding products point at slot ``nnz_cap`` and are dropped by the scatter).
+A numeric replay is therefore two gathers + one ``indices_are_sorted``
+segment-sum — no O(f_m) permutation pass, no mask — and accumulates in
+``jnp.result_type(a_values, b_values)`` so mixed-precision operands never
+silently downcast.
 
 Static capacities (``fm_cap``, ``nnz_cap``, and the CSR buffer caps of A and
 B) are rounded up to geometric x2 buckets under ``core.meta.round_capacity``
@@ -36,8 +45,17 @@ compiled executable instead of each minting its own. On top of that,
 ``spgemm()`` consults a structure-keyed LRU plan cache
 (``core/plan_cache.py``): a repeated structure with new values skips the
 expansion and sort entirely and replays ``numeric_reuse`` — the paper's Reuse
-case with zero caller bookkeeping and zero recompiles. ``TRACE_COUNTS``
-records retraces of every jitted stage so benchmarks and tests can assert the
+case with zero caller bookkeeping and zero recompiles. For reuse-dominated
+workloads (multigrid setup, graph analytics with changing weights),
+``core/executor.py`` goes one step further: a ``ReuseExecutor`` pins a plan
+once (one structure hash, ever) and replays it as a single jitted dispatch —
+optionally batched over stacked value arrays and optionally through the
+Pallas ``kernels/segsum_reuse.py`` flat-parallel kernel.
+
+Note the dense method returns ``plan=None``: the KKDENSE path has no
+product->slot map, so it offers no Reuse fast path — use ``method="sparse"``
+(or an executor) when structure reuse matters. ``TRACE_COUNTS`` records
+retraces of every jitted stage so benchmarks and tests can assert the
 one-expansion/one-sort contract and the bucketing's recompile savings.
 """
 from __future__ import annotations
@@ -111,15 +129,21 @@ class SortedExpansion(NamedTuple):
 
 
 class SpgemmPlan(NamedTuple):
-    """Cached numeric plan enabling the Reuse fast path."""
+    """Cached numeric plan enabling the Reuse fast path (v2, precomposed).
+
+    The sort permutation is composed into the slot maps at plan-build time:
+    ``a_slot_s``/``b_slot_s`` are already in sorted product order, and
+    ``seg_ids`` folds validity in as a sentinel (padding products map to slot
+    ``nnz_cap``, which the ``mode="drop"`` scatter discards). A replay is two
+    gathers + one sorted segment-sum — no permutation gather, no mask.
+    """
 
     indptr: jax.Array  # (m+1,) int32 — C row pointers
     indices: jax.Array  # (nnz_cap,) int32 — C columns, sorted per row
-    order: jax.Array  # (fm_cap,) int32 — product sort permutation
     seg_ids: jax.Array  # (fm_cap,) int32 — sorted product -> C slot
-    a_slot: jax.Array  # (fm_cap,) int32
-    b_slot: jax.Array  # (fm_cap,) int32
-    valid: jax.Array  # (fm_cap,) bool
+    #                     (nnz_cap sentinel for padding -> dropped)
+    a_slot_s: jax.Array  # (fm_cap,) int32 — A slot per sorted product
+    b_slot_s: jax.Array  # (fm_cap,) int32 — B slot per sorted product
     shape: tuple  # (m, k) of C
 
 
@@ -229,7 +253,12 @@ def expand_and_sort(a: CSR, b: CSR, fm_cap: int) -> SortedExpansion:
 
 @partial(jax.jit, static_argnames=("k", "nnz_cap"))
 def plan_from_sorted(sx: SortedExpansion, k: int, nnz_cap: int) -> SpgemmPlan:
-    """Back half of a fresh multiply: C structure + reuse plan, no re-sort."""
+    """Back half of a fresh multiply: C structure + reuse plan, no re-sort.
+
+    Precomposes the sort permutation into the slot maps (plan v2): the one
+    extra gather pair here is paid once per *structure*, saving one O(f_m)
+    permutation gather on every numeric replay.
+    """
     _note_trace("plan_from_sorted")
     m = sx.row_sizes.shape[0]
     c_indices = jnp.zeros((nnz_cap,), jnp.int32).at[sx.seg_ids].max(
@@ -241,11 +270,9 @@ def plan_from_sorted(sx: SortedExpansion, k: int, nnz_cap: int) -> SpgemmPlan:
     return SpgemmPlan(
         indptr=indptr,
         indices=c_indices,
-        order=sx.order,
         seg_ids=jnp.where(sx.valid_s, sx.seg_ids, nnz_cap),  # padded -> dropped
-        a_slot=sx.a_slot,
-        b_slot=sx.b_slot,
-        valid=sx.valid,
+        a_slot_s=sx.a_slot[sx.order],
+        b_slot_s=sx.b_slot[sx.order],
         shape=(m, k),
     )
 
@@ -380,16 +407,21 @@ def numeric_fresh(a: CSR, b: CSR, fm_cap: int, nnz_cap: int):
 
 @jax.jit
 def numeric_reuse(plan: SpgemmPlan, a_values: jax.Array, b_values: jax.Array) -> jax.Array:
-    """The Reuse case: same structure, new values. Gather products in sorted
-    order and segment-sum into C slots. No sort, no hash, no recompile."""
+    """The Reuse case: same structure, new values. Two gathers + one sorted
+    segment-sum. No sort, no hash, no permutation pass, no recompile.
+
+    The precomposed plan already orders the slot maps, so padding products
+    need no mask: their sentinel ``seg_ids == nnz_cap`` fall off the scatter
+    (``mode="drop"``). Accumulates in ``jnp.result_type(a_values, b_values)``
+    so mixed-precision operands keep full product precision.
+    """
     _note_trace("numeric_reuse")
-    prod = jnp.where(
-        plan.valid, a_values[plan.a_slot] * b_values[plan.b_slot], 0
-    ).astype(a_values.dtype)
-    prod_sorted = prod[plan.order]
+    acc_dtype = jnp.result_type(a_values, b_values)
+    prod = (a_values[plan.a_slot_s].astype(acc_dtype)
+            * b_values[plan.b_slot_s].astype(acc_dtype))
     nnz_cap = plan.indices.shape[0]
-    return jnp.zeros((nnz_cap,), a_values.dtype).at[plan.seg_ids].add(
-        prod_sorted, mode="drop", indices_are_sorted=True
+    return jnp.zeros((nnz_cap,), acc_dtype).at[plan.seg_ids].add(
+        prod, mode="drop", indices_are_sorted=True
     )
 
 
@@ -471,6 +503,12 @@ def _repad_csr(a: CSR, nnz_cap: int) -> CSR:
     """
     if nnz_cap == a.nnz_cap:
         return a
+    nnz = int(a.indptr[-1])
+    if nnz > nnz_cap:
+        raise ValueError(
+            f"cannot repad CSR to nnz_cap={nnz_cap}: {nnz} live entries would "
+            f"be truncated (buffer cap {a.nnz_cap})"
+        )
     keep = min(nnz_cap, a.nnz_cap)
     indices = np.zeros(nnz_cap, np.int32)
     values = np.zeros(nnz_cap, np.asarray(a.values).dtype)
@@ -478,6 +516,46 @@ def _repad_csr(a: CSR, nnz_cap: int) -> CSR:
     values[:keep] = np.asarray(a.values)[:keep]
     return CSR(indptr=a.indptr, indices=jnp.asarray(indices),
                values=jnp.asarray(values), shape=a.shape)
+
+
+def prepare_sparse_inputs(a: CSR, b: CSR, policy: str):
+    """Bucket the operand buffer caps and size the expansion: the shared
+    preamble of every sparse-path entry point (``spgemm()`` and
+    ``executor.spgemm_grouped``), so the inputs feeding ``structure_key``
+    can never drift between them. Returns (a, b, fm, maxrf, fm_cap)."""
+    a = _repad_csr(a, round_capacity(max(int(a.indptr[-1]), 1), policy))
+    b = _repad_csr(b, round_capacity(max(int(b.indptr[-1]), 1), policy))
+    fm, maxrf = (int(x) for x in _fm_scalars(a, b))
+    return a, b, fm, maxrf, round_capacity(fm, policy)
+
+
+def resolve_plan(a: CSR, b: CSR, fm_cap: int, policy: str, cache, key=None):
+    """Get-or-build the numeric plan for (repadded) A, B.
+
+    The single source of truth for plan resolution — both ``spgemm()`` and
+    ``executor.spgemm_grouped`` go through here, so the structure key, the
+    nnz_cap bucketing, and the cache put/get can never drift apart (a drift
+    would silently replay a plan with the wrong capacities). ``key`` lets a
+    caller that already hashed the structure (the grouping loop) skip the
+    second O(nnz) digest.
+
+    Returns (plan, cache_state) with cache_state in {"hit", "miss", "bypass"}.
+    """
+    from repro.core.plan_cache import structure_key  # cycle-free late import
+
+    if key is None:
+        key = structure_key(a, b, fm_cap, policy)
+    if cache is not None:
+        plan = cache.get(key)
+        if plan is not None:
+            return plan, "hit"
+    sx = expand_and_sort(a, b, fm_cap)
+    nnz_cap = round_capacity(int(jnp.sum(sx.row_sizes)), policy)
+    plan = plan_from_sorted(sx, b.k, nnz_cap)
+    if cache is None:
+        return plan, "bypass"
+    cache.put(key, plan)
+    return plan, "miss"
 
 
 def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
@@ -496,9 +574,13 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         compression would add work, not save it — its stats (cf/cmrf/
         compressed) are therefore only present on the dense path; use
         ``symbolic()`` directly to inspect compression on any matrix.
+
+    The dense method returns ``plan=None``: KKDENSE has no product->slot map
+    and therefore no Reuse fast path. Callers that need structure reuse (or a
+    ``ReuseExecutor``) must use ``method="sparse"``.
     """
     from repro.core.meta import choose_method  # cycle-free late import
-    from repro.core.plan_cache import default_plan_cache, structure_key
+    from repro.core.plan_cache import default_plan_cache
 
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
     stats: dict = {"pad_policy": policy}
@@ -529,41 +611,18 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         cache = None
     else:
         cache = plan_cache
-    a = _repad_csr(a, round_capacity(max(int(a.indptr[-1]), 1), policy))
-    b = _repad_csr(b, round_capacity(max(int(b.indptr[-1]), 1), policy))
-    fm, maxrf = (int(x) for x in _fm_scalars(a, b))
+    a, b, fm, maxrf, fm_cap = prepare_sparse_inputs(a, b, policy)
     stats["fm"] = fm
     stats["maxrf"] = maxrf
-    fm_cap = round_capacity(fm, policy)
     stats["fm_cap"] = fm_cap
 
-    key = None
-    if cache is not None:
-        key = structure_key(a, b, fm_cap, policy)
-        plan = cache.get(key)
-        if plan is not None:
-            values = numeric_reuse(plan, a.values, b.values)
-            c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
-                    shape=(a.m, b.k))
-            stats["cache"] = "hit"
-            stats["nnz_c"] = int(plan.indptr[-1])
-            stats["nnz_cap"] = plan.indices.shape[0]
-            return SpgemmResult(c=c, plan=plan, stats=stats)
-
-    sx = expand_and_sort(a, b, fm_cap)
-    nnz = int(jnp.sum(sx.row_sizes))
-    nnz_cap = round_capacity(nnz, policy)
-    plan = plan_from_sorted(sx, b.k, nnz_cap)
+    plan, cache_state = resolve_plan(a, b, fm_cap, policy, cache)
     values = numeric_reuse(plan, a.values, b.values)
     c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
             shape=(a.m, b.k))
-    if cache is not None:
-        cache.put(key, plan)
-        stats["cache"] = "miss"
-    else:
-        stats["cache"] = "bypass"
-    stats["nnz_c"] = nnz
-    stats["nnz_cap"] = nnz_cap
+    stats["cache"] = cache_state
+    stats["nnz_c"] = int(plan.indptr[-1])
+    stats["nnz_cap"] = plan.indices.shape[0]
     return SpgemmResult(c=c, plan=plan, stats=stats)
 
 

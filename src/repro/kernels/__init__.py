@@ -11,18 +11,23 @@ Kernels:
   flash_attention  — GQA / sliding-window / softcap blocked attention
   bsr_spgemm       — block-sparse (BSR) numeric phase: one MXU matmul per
                      grid step, plan-steered gathers (the MXU flagship)
+  segsum_reuse     — Reuse-case numeric replay: flat-parallel
+                     gather-multiply-segment-sum over f_m tiles
 """
 from repro.kernels.spgemm_symbolic import spgemm_symbolic, spgemm_symbolic_bucketed
 from repro.kernels.spgemm_numeric import spgemm_numeric, spgemm_numeric_bucketed
 from repro.kernels.grouped_matmul import grouped_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.bsr_spgemm import bsr_spgemm_numeric, plan_bsr_numeric
+from repro.kernels.segsum_reuse import segsum_reuse, segsum_reuse_arrays
 
 __all__ = [
     "spgemm_symbolic",
     "spgemm_symbolic_bucketed",
     "spgemm_numeric",
     "spgemm_numeric_bucketed",
+    "segsum_reuse",
+    "segsum_reuse_arrays",
     "grouped_matmul",
     "flash_attention",
     "bsr_spgemm_numeric",

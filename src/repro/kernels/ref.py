@@ -45,6 +45,31 @@ def spgemm_numeric_ref(a_idx, a_val, b_idx, b_val, c_idx, c_nnz, k):
     return jax.vmap(row)(a_idx, a_val, c_idx, c_nnz)
 
 
+def segsum_reuse_ref(a_slot_s, b_slot_s, seg_ids, a_values, b_values, nnz_cap):
+    """Reuse-case numeric replay: C[seg] += A[a_slot] * B[b_slot].
+
+    a_slot_s/b_slot_s/seg_ids: (fm_cap,) int32 in sorted product order;
+    padding products carry the sentinel ``seg_ids == nnz_cap`` (dropped).
+    Returns (nnz_cap,) values in result_type(a, b) — the precomposed-plan
+    contract of ``core.spgemm.numeric_reuse``.
+
+    Deliberately NOT the gather/scatter formulation the implementations use:
+    a host-side python loop over live products, so it can catch a bug in the
+    shared vectorized expression.
+    """
+    import numpy as np
+
+    a_np, b_np = np.asarray(a_values), np.asarray(b_values)
+    a_idx, b_idx = np.asarray(a_slot_s), np.asarray(b_slot_s)
+    segs = np.asarray(seg_ids)
+    acc_dtype = jnp.result_type(a_values, b_values)
+    out = np.zeros(nnz_cap, np.dtype(acc_dtype))
+    for t, s in enumerate(segs):
+        if 0 <= s < nnz_cap:
+            out[s] += a_np[a_idx[t]] * b_np[b_idx[t]]
+    return jnp.asarray(out)
+
+
 def grouped_matmul_ref(x, w, group_ids):
     """Per-token expert matmul: y[t] = x[t] @ w[group_ids[t]].
 

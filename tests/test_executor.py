@@ -1,0 +1,287 @@
+"""Batched reuse executor + v2 precomposed plan + Pallas segsum kernel tests.
+
+Hypothesis-free (runs on the bare container). Covers the PR 3 contracts:
+  * plan v2 precomposition is exactly the jnp.lexsort reference composition
+  * numeric_reuse accumulates in result_type (mixed dtypes don't downcast)
+  * ReuseExecutor.apply never retraces and never re-hashes across calls
+  * apply_batched == per-call numeric_reuse loop, bitwise
+  * spgemm_grouped: mixed structures -> one batched dispatch per group,
+    results correct and in input order
+  * Pallas segsum_reuse (interpret) == numeric_reuse / ref oracle
+  * _repad_csr refuses to truncate live entries
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HASH_COUNTS,
+    DISPATCH_COUNTS,
+    PlanCache,
+    ReuseExecutor,
+    numeric_reuse,
+    reset_dispatch_counts,
+    reset_hash_counts,
+    reset_trace_counts,
+    spgemm,
+    spgemm_grouped,
+)
+from repro.core.spgemm import TRACE_COUNTS, _repad_csr, expand_products
+from repro.kernels import ref, segsum_reuse, segsum_reuse_arrays
+from repro.sparse import CSR, dense_spgemm_oracle, galerkin_triple, random_csr
+
+
+def _with_values(mat: CSR, seed: int, dtype=jnp.float32) -> CSR:
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.standard_normal(mat.nnz_cap), dtype)
+    return CSR(mat.indptr, mat.indices, vals, mat.shape)
+
+
+def _reference_plan_arrays(a: CSR, b: CSR, fm_cap: int, nnz_cap: int):
+    """Independent v2-plan construction: expansion + jnp.lexsort composition."""
+    ex = expand_products(a, b, fm_cap)
+    order = jnp.lexsort((ex.col, ex.row))
+    rows_s, cols_s, valid_s = ex.row[order], ex.col[order], ex.valid[order]
+    heads = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_),
+         (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1])]
+    ) & valid_s
+    seg = (jnp.cumsum(heads.astype(jnp.int32)) - 1).clip(0)
+    seg = jnp.where(valid_s, seg, nnz_cap)
+    return ex.a_slot[order], ex.b_slot[order], seg.astype(jnp.int32)
+
+
+def test_plan_v2_precomposed_matches_lexsort_reference():
+    """plan.a_slot_s/b_slot_s/seg_ids must equal composing the expansion with
+    a jnp.lexsort permutation by hand — and the replay must match bitwise."""
+    a = random_csr(33, 41, 3.0, 1)
+    b = random_csr(41, 29, 2.5, 2)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    plan = res.plan
+    fm_cap = plan.seg_ids.shape[0]
+    nnz_cap = plan.indices.shape[0]
+    ref_a, ref_b, ref_seg = _reference_plan_arrays(a, b, fm_cap, nnz_cap)
+    np.testing.assert_array_equal(np.asarray(plan.seg_ids), np.asarray(ref_seg))
+    # slots only matter where the product is live (sentinel seg == nnz_cap)
+    live = np.asarray(ref_seg) < nnz_cap
+    np.testing.assert_array_equal(np.asarray(plan.a_slot_s)[live],
+                                  np.asarray(ref_a)[live])
+    np.testing.assert_array_equal(np.asarray(plan.b_slot_s)[live],
+                                  np.asarray(ref_b)[live])
+    got = numeric_reuse(plan, a.values, b.values)
+    want = ref.segsum_reuse_ref(ref_a, ref_b, ref_seg, a.values, b.values,
+                                nnz_cap)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_numeric_reuse_mixed_dtype_accumulates_in_result_type():
+    """f16 * f32 must accumulate (and return) f32, not downcast to f16."""
+    a = random_csr(24, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    a16 = _with_values(a, 3, jnp.float16)
+    out = numeric_reuse(res.plan, a16.values, b.values)
+    assert out.dtype == jnp.result_type(jnp.float16, jnp.float32) == jnp.float32
+    want = numeric_reuse(res.plan, a16.values.astype(jnp.float32), b.values)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_executor_apply_zero_retraces_zero_rehashes():
+    """Acceptance: after the first apply, repeated replays on a pinned plan
+    trigger zero retraces of ANY jitted stage and zero structure hashes."""
+    jax.clear_caches()
+    a = random_csr(48, 48, 4.0, 11)
+    b = random_csr(48, 48, 3.0, 12)
+    ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+    ex.apply(a.values, b.values)  # warm the dispatch
+    reset_trace_counts()
+    reset_hash_counts()
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        av = jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32)
+        bv = jnp.asarray(rng.standard_normal(b.nnz_cap), jnp.float32)
+        jax.block_until_ready(ex.apply(av, bv))
+    assert sum(TRACE_COUNTS.values()) == 0  # zero retraces
+    assert sum(HASH_COUNTS.values()) == 0  # zero structure re-hashes
+
+
+def test_apply_batched_matches_per_call_loop_bitwise():
+    a = random_csr(30, 40, 3.0, 21)
+    b = random_csr(40, 35, 2.0, 22)
+    ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+    rng = np.random.default_rng(1)
+    a_stack = jnp.asarray(rng.standard_normal((8, a.nnz_cap)), jnp.float32)
+    b_stack = jnp.asarray(rng.standard_normal((8, b.nnz_cap)), jnp.float32)
+    got = ex.apply_batched(a_stack, b_stack)
+    assert got.shape == (8, ex.nnz_cap)
+    loop = jnp.stack(
+        [numeric_reuse(ex.plan, a_stack[i], b_stack[i]) for i in range(8)]
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(loop))
+
+
+def test_apply_batched_broadcast_unbatched_operand():
+    """Fixed P against a batch of A values (the multigrid serving shape)."""
+    _, a, p = galerkin_triple(16, 16, 4)
+    ex = ReuseExecutor.from_matrices(a, p, plan_cache=PlanCache())
+    rng = np.random.default_rng(2)
+    a_stack = jnp.asarray(rng.standard_normal((5, a.nnz_cap)), jnp.float32)
+    got = ex.apply_batched(a_stack, p.values)
+    loop = jnp.stack(
+        [numeric_reuse(ex.plan, a_stack[i], p.values) for i in range(5)]
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(loop))
+    with pytest.raises(ValueError):
+        ex.apply_batched(a_stack[0], p.values)  # neither operand stacked
+
+
+def test_spgemm_grouped_mixed_structures():
+    """Interleaved structures: results correct + one dispatch per group."""
+    a1 = random_csr(26, 30, 3.0, 31)
+    b1 = random_csr(30, 24, 2.0, 32)
+    a2 = random_csr(14, 18, 2.0, 33)
+    b2 = random_csr(18, 22, 2.0, 34)
+    pairs = [
+        (a1, b1),
+        (a2, b2),
+        (_with_values(a1, 41), _with_values(b1, 42)),
+        (_with_values(a2, 43), b2),
+        (_with_values(a1, 44), b1),
+    ]
+    reset_dispatch_counts()
+    outs = spgemm_grouped(pairs, plan_cache=PlanCache())
+    assert len(outs) == len(pairs)
+    for (pa, pb), c in zip(pairs, outs):
+        np.testing.assert_allclose(
+            np.asarray(c.to_dense()), dense_spgemm_oracle(pa, pb),
+            rtol=1e-4, atol=1e-4,
+        )
+    # two structure groups (sizes 3 and 2) -> exactly two batched dispatches
+    assert DISPATCH_COUNTS["apply_batched"] == 2
+    assert DISPATCH_COUNTS["apply"] == 0
+
+
+def test_spgemm_grouped_mixed_dtypes_keep_per_call_contract():
+    """Same structure, different value dtypes: stacking must not promote —
+    each pair's result dtype equals its per-call numeric_reuse dtype."""
+    a = random_csr(22, 22, 2.5, 55)
+    b = random_csr(22, 22, 2.5, 56)
+    pairs = [(a, b), (_with_values(a, 1, jnp.float16), _with_values(b, 2, jnp.float16))]
+    outs = spgemm_grouped(pairs, plan_cache=PlanCache())
+    assert outs[0].values.dtype == jnp.float32
+    assert outs[1].values.dtype == jnp.float16
+
+
+def test_spgemm_grouped_reuses_plan_cache():
+    """A second grouped batch over known structures skips expansion: the
+    plans come from the cache (hits == number of groups)."""
+    cache = PlanCache()
+    a = random_csr(20, 20, 2.5, 51)
+    b = random_csr(20, 20, 2.5, 52)
+    pairs = [(a, b), (_with_values(a, 1), _with_values(b, 2))]
+    spgemm_grouped(pairs, plan_cache=cache)
+    misses = cache.misses
+    spgemm_grouped(pairs, plan_cache=cache)
+    assert cache.misses == misses  # no new plan builds
+    assert cache.hits >= 1
+
+
+@pytest.mark.parametrize("seed,m,n,k,d", [
+    (1, 40, 50, 45, 3.0),
+    (2, 9, 7, 5, 1.5),
+    (3, 150, 150, 150, 6.0),  # fm_cap > FM_TILE: multi-tile grid path
+])
+def test_pallas_segsum_matches_numeric_reuse(seed, m, n, k, d):
+    from repro.kernels.segsum_reuse import FM_TILE
+
+    a = random_csr(m, n, d, seed)
+    b = random_csr(n, k, d, seed + 100)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    if seed == 3:  # construction precondition: cross-tile RMW must exercise
+        assert res.plan.seg_ids.shape[0] > FM_TILE
+    want = numeric_reuse(res.plan, a.values, b.values)
+    got = segsum_reuse(res.plan, a.values, b.values, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_segsum_matches_ref_oracle():
+    a = random_csr(21, 17, 2.0, 61)
+    b = random_csr(17, 19, 2.0, 62)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    p = res.plan
+    want = ref.segsum_reuse_ref(p.a_slot_s, p.b_slot_s, p.seg_ids,
+                                a.values, b.values, p.indices.shape[0])
+    got = segsum_reuse_arrays(p.a_slot_s, p.b_slot_s, p.seg_ids,
+                              a.values, b.values,
+                              nnz_cap=p.indices.shape[0], interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_executor_pallas_backend_interpret():
+    a = random_csr(25, 25, 3.0, 71)
+    b = random_csr(25, 25, 3.0, 72)
+    ex_xla = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache(),
+                                         backend="xla")
+    ex_pl = ReuseExecutor(ex_xla.plan, backend="pallas", interpret=True)
+    got = ex_pl.apply(a.values, b.values)
+    want = ex_xla.apply(a.values, b.values)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        ReuseExecutor(ex_xla.plan, backend="cuda")
+
+
+def test_repad_csr_raises_on_truncation():
+    a = random_csr(16, 16, 3.0, 81)
+    nnz = int(a.indptr[-1])
+    assert nnz > 8  # construction precondition for the truncation case
+    with pytest.raises(ValueError, match="truncated"):
+        _repad_csr(a, 8)
+    # growing (and the no-op case) still work
+    assert _repad_csr(a, a.nnz_cap).nnz_cap == a.nnz_cap
+    grown = _repad_csr(a, a.nnz_cap + 8)
+    assert grown.nnz_cap == a.nnz_cap + 8
+    np.testing.assert_allclose(np.asarray(grown.to_dense()),
+                               np.asarray(a.to_dense()))
+
+
+def test_executor_rejects_none_plan_and_bad_donate():
+    """Dense spgemm returns plan=None (no Reuse path): constructing an
+    executor from it must fail at construction, not inside a jit."""
+    a = random_csr(10, 12, 2.0, 95)
+    b = random_csr(12, 8, 2.0, 96)
+    res = spgemm(a, b, method="dense")
+    assert res.plan is None
+    with pytest.raises(ValueError, match="plan=None"):
+        ReuseExecutor(res.plan)
+    ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+    with pytest.raises(ValueError, match="donate"):
+        ex.apply(a.values, b.values, donate="everything")
+
+
+def test_executor_per_operand_donation():
+    """donate='a' must leave the shared B buffer alive across calls (the
+    fixed-prolongator serving loop)."""
+    a = random_csr(20, 20, 2.0, 97)
+    b = random_csr(20, 20, 2.0, 98)
+    ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+    want = np.asarray(ex.apply(a.values, b.values))
+    rng = np.random.default_rng(3)
+    for _ in range(3):  # b.values passed every call: must never be donated
+        av = jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32)
+        out = ex.apply(av, b.values, donate="a")
+    np.testing.assert_array_equal(np.asarray(ex.apply(a.values, b.values)),
+                                  want)
+
+
+def test_executor_to_csr_roundtrip():
+    a = random_csr(18, 20, 2.0, 91)
+    b = random_csr(20, 15, 2.0, 92)
+    ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+    c = ex.to_csr(ex.apply(a.values, b.values))
+    np.testing.assert_allclose(np.asarray(c.to_dense()),
+                               dense_spgemm_oracle(a, b), rtol=1e-4, atol=1e-4)
