@@ -16,17 +16,24 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        structures share executables, repeats hit the cache
   bench_fm_groups    — Fig 8: meta-vs-fixed speedup grouped by f_m
   bench_distributed  — §multi-pod: 1-D row-wise SpGEMM scaling terms
+  bench_dist         — repro.dist sharded-plan replay: latency per replay
+                       count on a pinned ShardedReuseExecutor (flat curve =
+                       zero per-replay host work); mesh shape in the row
   bench_train_smoke  — LM substrate: tokens/s of a smoke train step
 
-``--quick`` runs a CI-sized smoke subset (2 suite cases; compile, reuse and
-batched-reuse benches only). ``--json PATH`` additionally writes the rows as
-machine-readable JSON (exact derived metric values; the CSV column is a
-rendering of them) so CI can archive a BENCH_*.json trajectory.
+``--quick`` runs a CI-sized smoke subset (2 suite cases; compile, reuse,
+batched-reuse and dist benches only). ``--devices N`` forces an N-device
+host platform (must be set before jax initializes — the flag is injected at
+the top of main()) so the shard_map paths run mesh-wide on CPU-only
+runners. ``--json PATH`` additionally writes the rows as machine-readable
+JSON (exact derived metric values; the CSV column is a rendering of them)
+so CI can archive a BENCH_*.json trajectory.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -267,16 +274,78 @@ def bench_fm_groups(results):
 def bench_distributed():
     """1-D row-wise distributed SpGEMM phase costs (single real device:
     reports the sharded-path overhead vs local)."""
+    from repro.compat import make_mesh
     from repro.core import distributed_spgemm
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     for name, a, b in CASES[:3]:
         us_local, _ = timeit(lambda: spgemm(a, b).c.values)
         us_dist, _ = timeit(
             lambda: distributed_spgemm(a, b, mesh).values)
         emit(f"distributed/{name}", us_dist,
              {"local_us": us_local, "overhead": us_dist / us_local})
+
+
+def bench_dist(n_windows=5, window=16):
+    """repro.dist acceptance benchmark: replay latency flat vs replay count.
+
+    Pins one ShardedReuseExecutor on the full host mesh and runs ONE stream
+    of ``n_windows * window`` blocked replays, each individually timed,
+    split into DISJOINT equal-sized windows. Row ``r{n}`` reports the
+    median latency of the window starting at stream position n — a genuine
+    "does the Nth replay cost more than the 1st" measurement (overlapping
+    windows would mostly compare samples with themselves), so flatness
+    across windows rules out accumulating per-replay host work (cache
+    growth, re-partitioning, leak-driven drift). The deterministic half of
+    the proof rides in the same rows: retraces and structure hashes counted
+    over the whole stream (both must be 0 — constant per-replay overhead
+    would not show up as slope, the counters catch it instead). Medians,
+    not means: shared CI runners throttle in multi-second windows and the
+    spikes land in the tail. The mesh shape rides in every row so the
+    --json artifact records the decomposition the numbers were taken on.
+    """
+    from repro.core import HASH_COUNTS, PlanCache
+    from repro.core.spgemm import TRACE_COUNTS
+    from repro.dist import ShardedReuseExecutor
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh()
+    mesh_shape = "x".join(str(s) for s in mesh.devices.shape)
+    a = random_csr(512, 512, 4.0, 7)
+    b = random_csr(512, 512, 4.0, 8)
+    for placement in ("replicated", "allgather"):
+        ex = ShardedReuseExecutor.from_matrices(
+            a, b, mesh, b_placement=placement, plan_cache=PlanCache())
+        rng = np.random.default_rng(0)
+        av = jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32)
+        bv = jnp.asarray(rng.standard_normal(b.nnz_cap), jnp.float32)
+        for _ in range(3):  # warm the dispatch path
+            jax.block_until_ready(ex.apply(av, bv))
+        traces0 = sum(TRACE_COUNTS.values())
+        hashes0 = sum(HASH_COUNTS.values())
+        ts = []
+        for _ in range(n_windows * window):
+            t0 = time.perf_counter()
+            jax.block_until_ready(ex.apply(av, bv))
+            ts.append(time.perf_counter() - t0)
+        retraces = sum(TRACE_COUNTS.values()) - traces0
+        hashes = sum(HASH_COUNTS.values()) - hashes0
+        per_window = {}
+        for w in range(n_windows):
+            n = w * window + 1  # 1-based stream position of window start
+            seg = ts[w * window: (w + 1) * window]
+            med_us = float(np.median(seg)) * 1e6
+            per_window[n] = med_us
+            emit(f"dist/{placement}/r{n}", med_us,
+                 {"us_per_replay": med_us, "replay_index": n,
+                  "window": window,
+                  "window_total_us": float(np.sum(seg)) * 1e6,
+                  "retraces": retraces, "hashes": hashes,
+                  "mesh_shape": mesh_shape, "b_placement": placement})
+        flatness = max(per_window.values()) / min(per_window.values())
+        emit(f"dist/{placement}/flatness", 0.0,
+             {"max_over_min": flatness, "retraces": retraces,
+              "hashes": hashes, "mesh_shape": mesh_shape})
 
 
 def bench_train_smoke():
@@ -316,13 +385,27 @@ def main(argv: list[str] | None = None) -> None:
         "--json", metavar="PATH", default=None,
         help="also write results as machine-readable JSON to PATH",
     )
+    parser.add_argument(
+        "--devices", type=int, default=0, metavar="N",
+        help="force an N-device host platform (CPU shard_map benches); "
+             "0 keeps the platform's real device count",
+    )
     args = parser.parse_args(argv)
+    if args.devices > 1:
+        # must land before jax touches its backend (lazy: nothing above
+        # builds arrays) — same mechanism the distributed tests use
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
     CASES[:] = list(suite())[:2] if args.quick else list(suite())
     print("name,us_per_call,derived")
     if args.quick:
         bench_compile()
         bench_reuse()
         bench_reuse_batched()
+        bench_dist()
     else:
         results = bench_methods()
         bench_profile(results)
@@ -332,6 +415,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_compile()
         bench_fm_groups(results)
         bench_distributed()
+        bench_dist()
         bench_train_smoke()
     print(f"# {len(ROWS)} rows")
     if args.json:
@@ -340,6 +424,7 @@ def main(argv: list[str] | None = None) -> None:
             "quick": bool(args.quick),
             "jax_version": jax.__version__,
             "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
             "rows": RESULTS,
         }
         with open(args.json, "w") as f:

@@ -9,6 +9,10 @@ single jitted dispatch per multiply — or ONE batched dispatch for a whole
 ensemble of timesteps (``apply_batched``).
 
     PYTHONPATH=src python examples/multigrid_reuse.py
+
+The distributed version of this scenario — the same pinned plans sharded
+over a device mesh via ``repro.dist.ShardedReuseExecutor`` — lives in
+examples/dist_multigrid.py.
 """
 import time
 

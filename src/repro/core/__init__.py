@@ -8,9 +8,11 @@ Public API:
     ReuseExecutor     — pinned-plan replay engine (single/batched dispatch)
     spgemm_grouped    — mixed-structure batch: one dispatch per structure
     compress_matrix   — §3.2 bit compression
-    distributed_spgemm — 1-D row-wise SpGEMM over a device mesh
+    distributed_spgemm — 1-D row-wise SpGEMM over a device mesh (from
+                        scratch; for pinned sharded plans see repro.dist)
     round_capacity    — capacity bucketing policy ("exact8" / "pow2")
-    PlanCache         — structure-keyed LRU of reuse plans (auto Reuse case)
+    PlanCache         — structure-keyed LRU of reuse plans (auto Reuse case;
+                        entry-count + bytes bounds)
 """
 from repro.core.spgemm import (
     SortedExpansion,
@@ -53,6 +55,7 @@ from repro.core.plan_cache import (
     HASH_COUNTS,
     PlanCache,
     default_plan_cache,
+    plan_nbytes,
     reset_hash_counts,
     structure_key,
 )
@@ -64,12 +67,17 @@ from repro.core.executor import (
 )
 from repro.core.distributed import (
     ShardedCSR,
+    allgather_value_perm,
     concat_csr_shards,
     dist_numeric,
     dist_symbolic,
     distributed_spgemm,
     merge_shards,
     partition_rows,
+    partition_value_map,
+    row_block_bounds,
+    shard_cap,
+    shard_fm_cap,
 )
 from repro.core.memory_pool import PoolConfig, acquire_release_sim, chunk_for_step, size_pool
 
@@ -108,6 +116,7 @@ __all__ = [
     "PlanCache",
     "HASH_COUNTS",
     "default_plan_cache",
+    "plan_nbytes",
     "reset_hash_counts",
     "structure_key",
     "DISPATCH_COUNTS",
@@ -115,12 +124,17 @@ __all__ = [
     "reset_dispatch_counts",
     "spgemm_grouped",
     "ShardedCSR",
+    "allgather_value_perm",
     "concat_csr_shards",
     "dist_numeric",
     "dist_symbolic",
     "distributed_spgemm",
     "merge_shards",
     "partition_rows",
+    "partition_value_map",
+    "row_block_bounds",
+    "shard_cap",
+    "shard_fm_cap",
     "PoolConfig",
     "acquire_release_sim",
     "chunk_for_step",

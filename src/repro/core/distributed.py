@@ -1,19 +1,34 @@
-"""Distributed SpGEMM: the paper's 1-D row-wise decomposition on a JAX mesh.
+"""Partitioning / halo layer for distributed SpGEMM (1-D row decomposition).
 
-C's rows are partitioned over the ``data`` mesh axis (the paper's first-level
-"team" partitioning lifted to devices). Two B placements:
+This module is the *partitioning substrate* under the ``repro.dist``
+subsystem: it owns the host-side row decomposition (``partition_rows`` /
+``merge_shards``), the jittable shard-concat used after all-gathering B
+(``concat_csr_shards``), the value-slot maps that let a pinned sharded plan
+re-shard *values* without touching structure (``partition_value_map`` /
+``allgather_value_perm``), and the from-scratch reference driver
+``distributed_spgemm``. The plan-lifecycle layer — ``ShardedPlan``,
+``ShardedReuseExecutor``, the mesh-aware plan cache — lives in
+``repro.dist`` and composes these primitives; use it whenever the structure
+is reused across numeric calls.
+
+C's rows are partitioned over the ``data`` mesh axis (the paper's
+first-level "team" partitioning lifted to devices). Two B placements:
 
 * ``replicated`` — B lives on every shard (the common 1-D choice; the paper
   notes each row of B is read ~delta_A times, so replication trades memory
   for zero communication);
 * ``allgather``  — B is row-sharded and all-gathered per step (halves
   at-rest memory, pays one all-gather; the collective shows up in the
-  roofline term of the dry-run).
+  roofline term of the dry-run). Under ``repro.dist`` the *structure*
+  all-gather is hoisted to pin time — replays only gather values.
 
 The two-phase contract extends naturally: distributed symbolic returns the
 sharded row sizes, the host syncs the max caps (one tiny host round-trip —
 the same role as the paper's host-side allocation between phases), and the
-distributed numeric runs with uniform static shapes on every shard.
+distributed numeric runs with uniform static shapes on every shard. Every
+static cap is bucketed through ``core.meta.round_capacity`` so shards share
+capacity buckets — and therefore compiled executables — with the
+single-device path.
 """
 from __future__ import annotations
 
@@ -25,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.core.meta import DEFAULT_PAD_POLICY, round_capacity
 from repro.core.spgemm import numeric_fresh, symbolic_plain
 from repro.sparse.formats import CSR
 
@@ -46,22 +63,47 @@ class ShardedCSR(NamedTuple):
         return self.indptr.shape[1] - 1
 
 
-def partition_rows(a: CSR, num_shards: int) -> ShardedCSR:
+def row_block_bounds(a: CSR, num_shards: int) -> np.ndarray:
+    """Host-side: (S+1,) nnz offsets of the contiguous row blocks of ``a``.
+
+    Shard ``s`` owns rows ``[s*ceil(m/S), min((s+1)*ceil(m/S), m))`` and its
+    values/indices live in the global buffers at ``[bounds[s], bounds[s+1])``.
+    The same bounds drive ``partition_rows`` and ``partition_value_map``, so
+    structure and value sharding can never disagree.
+    """
+    indptr = np.asarray(a.indptr)
+    m = a.m
+    m_loc = -(-m // num_shards)
+    return np.asarray(
+        [indptr[min(s * m_loc, m)] for s in range(num_shards + 1)], np.int64
+    )
+
+
+def shard_cap(a: CSR, num_shards: int, pad_policy: str | None = None) -> int:
+    """Uniform per-shard nnz capacity, bucketed via ``round_capacity`` so
+    shards share capacity buckets with the single-device path."""
+    policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    bounds = row_block_bounds(a, num_shards)
+    return round_capacity(int(np.max(np.diff(bounds))), policy)
+
+
+def partition_rows(a: CSR, num_shards: int,
+                   pad_policy: str | None = None) -> ShardedCSR:
     """Host-side: split A into ``num_shards`` row blocks with uniform caps."""
     indptr = np.asarray(a.indptr)
     indices = np.asarray(a.indices)
     values = np.asarray(a.values)
     m = a.m
     m_loc = -(-m // num_shards)
-    # per-shard nnz
-    bounds = [indptr[min(s * m_loc, m)] for s in range(num_shards + 1)]
-    cap = max(max(bounds[s + 1] - bounds[s] for s in range(num_shards)), 8)
-    cap = -(-cap // 8) * 8
+    bounds = row_block_bounds(a, num_shards)
+    cap = shard_cap(a, num_shards, pad_policy)
     ip = np.zeros((num_shards, m_loc + 1), np.int32)
     ix = np.zeros((num_shards, cap), np.int32)
     vl = np.zeros((num_shards, cap), values.dtype)
     for s in range(num_shards):
-        r0, r1 = s * m_loc, min((s + 1) * m_loc, m)
+        # clamp both ends: when S > m whole shards fall past the last row
+        # (rows == 0) and must come out empty, not negatively sliced
+        r0, r1 = min(s * m_loc, m), min((s + 1) * m_loc, m)
         lo, hi = bounds[s], bounds[s + 1]
         ip[s, : r1 - r0 + 1] = indptr[r0 : r1 + 1] - lo
         ip[s, r1 - r0 + 1 :] = indptr[r1] - lo  # empty padded rows
@@ -94,6 +136,39 @@ def merge_shards(c_sh: ShardedCSR, m: int) -> CSR:
     indices = np.concatenate(out_ix) if out_ix else np.zeros(0, np.int32)
     values = np.concatenate(out_vl) if out_vl else np.zeros(0, np.float32)
     return CSR.from_arrays(np.asarray(out_ip, np.int32), indices, values, (m, c_sh.shape[1]))
+
+
+def partition_value_map(a: CSR, num_shards: int,
+                        pad_policy: str | None = None) -> np.ndarray:
+    """(S, cap) int32: global value slot feeding each shard value slot.
+
+    ``values[perm]`` re-shards a *values* array exactly the way
+    ``partition_rows`` sharded the structure — the device-side fast path a
+    pinned sharded plan uses to ingest fresh operand values without
+    re-partitioning structure. Padding slots point at clamped live slots;
+    their products carry the sentinel ``seg_id`` and are dropped.
+    """
+    bounds = row_block_bounds(a, num_shards)
+    cap = shard_cap(a, num_shards, pad_policy)
+    base = bounds[:-1, None] + np.arange(cap, dtype=np.int64)[None, :]
+    return np.minimum(base, max(a.nnz_cap - 1, 0)).astype(np.int32)
+
+
+def allgather_value_perm(b_sh: ShardedCSR) -> np.ndarray:
+    """(S*cap,) int32: flattened all-gather slot per global concat slot.
+
+    ``all_gather(values).reshape(-1)[perm]`` reproduces the value layout of
+    ``concat_csr_shards`` without re-concatenating structure — B's structure
+    all-gather is paid once at plan-pin time, replays only move values.
+    """
+    S, cap = b_sh.indices.shape
+    nnz_s = np.asarray(b_sh.indptr)[:, -1].astype(np.int64)
+    offs = np.concatenate([[0], np.cumsum(nnz_s)[:-1]])
+    perm = np.zeros(S * cap, np.int32)
+    for s in range(S):
+        n = int(nnz_s[s])
+        perm[offs[s]: offs[s] + n] = s * cap + np.arange(n, dtype=np.int64)
+    return perm
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -137,7 +212,7 @@ def dist_symbolic(a_sh: ShardedCSR, b: CSR | ShardedCSR, mesh, axis: str, fm_cap
             b_loc = _local_csr(b_ip, b_ix, b_vl, b.shape)
             return symbolic_plain(a_loc, b_loc, fm_cap)[None]
 
-        return jax.shard_map(
+        return shard_map(
             fn,
             mesh=mesh,
             in_specs=(P(axis), P(axis), P(axis), P(), P(), P()),
@@ -152,7 +227,7 @@ def dist_symbolic(a_sh: ShardedCSR, b: CSR | ShardedCSR, mesh, axis: str, fm_cap
         a_loc = _local_csr(ip[0], ix[0], vl[0], (m_loc, a_sh.shape[1]))
         return symbolic_plain(a_loc, b_glob, fm_cap)[None]
 
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axis),) * 6,
@@ -191,38 +266,50 @@ def dist_numeric(a_sh: ShardedCSR, b: CSR | ShardedCSR, mesh, axis: str,
 
         specs_in = (P(axis),) * 6
 
-    out = jax.shard_map(
+    out = shard_map(
         fn, mesh=mesh, in_specs=specs_in, out_specs=(P(axis), P(axis), P(axis))
     )(a_sh.indptr, a_sh.indices, a_sh.values, b.indptr, b.indices, b.values)
     return ShardedCSR(indptr=out[0], indices=out[1], values=out[2],
                       shape=(a_sh.shape[0], k))
 
 
-def distributed_spgemm(a: CSR, b: CSR, mesh, axis: str = "data",
-                       b_placement: str = "replicated") -> CSR:
-    """Host driver: partition -> symbolic -> sync caps -> numeric -> merge."""
-    num = mesh.shape[axis]
-    a_sh = partition_rows(a, num)
-    if b_placement == "replicated":
-        b_in: CSR | ShardedCSR = b
-    elif b_placement == "allgather":
-        b_in = partition_rows(b, num)
-    else:
-        raise ValueError(b_placement)
-
-    # static caps: per-shard f_m bound (host-side, numpy)
+def shard_fm_cap(a_sh: ShardedCSR, b: CSR,
+                 pad_policy: str | None = None) -> int:
+    """Host-side uniform per-shard f_m capacity (max over shards, bucketed)."""
+    policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
     b_rn = np.diff(np.asarray(b.indptr))
     a_ix = np.asarray(a_sh.indices)
     a_ip = np.asarray(a_sh.indptr)
-    fm_cap = 8
-    for s in range(num):
+    fm_cap = 1
+    for s in range(a_sh.num_shards):
         nnz_s = a_ip[s, -1]
         fm_s = int(b_rn[a_ix[s, :nnz_s]].sum()) if nnz_s else 0
         fm_cap = max(fm_cap, fm_s)
-    fm_cap = -(-fm_cap // 8) * 8
+    return round_capacity(fm_cap, policy)
 
+
+def distributed_spgemm(a: CSR, b: CSR, mesh, axis: str = "data",
+                       b_placement: str = "replicated",
+                       pad_policy: str | None = None) -> CSR:
+    """Host driver: partition -> symbolic -> sync caps -> numeric -> merge.
+
+    The from-scratch reference path: every call re-runs both phases. When
+    the structure repeats across calls, pin it once with
+    ``repro.dist.ShardedReuseExecutor`` (or ``spgemm(..., mesh=...)``, which
+    caches sharded plans) and replay only the numeric phase.
+    """
+    policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    num = mesh.shape[axis]
+    a_sh = partition_rows(a, num, policy)
+    if b_placement == "replicated":
+        b_in: CSR | ShardedCSR = b
+    elif b_placement == "allgather":
+        b_in = partition_rows(b, num, policy)
+    else:
+        raise ValueError(b_placement)
+
+    fm_cap = shard_fm_cap(a_sh, b, policy)
     sizes = dist_symbolic(a_sh, b_in, mesh, axis, fm_cap)  # (S, m_loc)
-    nnz_cap = max(int(jnp.max(jnp.sum(sizes, axis=1))), 8)
-    nnz_cap = -(-nnz_cap // 8) * 8
+    nnz_cap = round_capacity(int(jnp.max(jnp.sum(sizes, axis=1))), policy)
     c_sh = dist_numeric(a_sh, b_in, mesh, axis, fm_cap, nnz_cap)
     return merge_shards(c_sh, a.m)

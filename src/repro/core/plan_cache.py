@@ -27,6 +27,7 @@ import threading
 from collections import Counter, OrderedDict
 from typing import Any
 
+import jax
 import numpy as np
 
 # Hash telemetry: ``structure_key`` bumps this on every call. The executor's
@@ -39,6 +40,19 @@ def reset_hash_counts() -> None:
     HASH_COUNTS.clear()
 
 
+def plan_nbytes(plan) -> int:
+    """Device bytes pinned by a cached plan (sum over its array leaves).
+
+    Works for any pytree of arrays — ``SpgemmPlan`` and the sharded
+    ``repro.dist`` plans alike — so every cache flavor shares one accounting
+    rule.
+    """
+    return sum(
+        leaf.nbytes for leaf in jax.tree_util.tree_leaves(plan)
+        if hasattr(leaf, "nbytes")
+    )
+
+
 class PlanCache:
     """Bounded LRU mapping structure keys -> SpgemmPlan.
 
@@ -46,19 +60,28 @@ class PlanCache:
     from multiple threads). Tracks hit/miss/eviction counters so benchmarks
     can report cache efficiency alongside recompile counts.
 
-    The bound is entry-count, not bytes: a v2 plan holds three fm_cap-length
-    int32 arrays (seg_ids + precomposed slot maps), so one entry for a
-    multiply with f_m ~ 1e7 pins ~120 MB of device memory until evicted.
-    Size the capacity (or pass a dedicated PlanCache to spgemm) accordingly
-    for large-matrix workloads.
+    Two bounds compose: ``capacity`` (entry count) and ``max_bytes`` (device
+    memory pinned by cached plans, measured with ``plan_nbytes``). The bytes
+    bound matters because a v2 plan holds three fm_cap-length int32 arrays
+    (seg_ids + precomposed slot maps), so one entry for a multiply with
+    f_m ~ 1e7 pins ~120 MB of device memory until evicted — and executors
+    additionally pin plans *outside* the cache, so the cache must not hoard
+    what the executors already hold. The most recent entry is always kept,
+    even when it alone exceeds ``max_bytes`` (a cache that refuses the plan
+    it was just asked to store would silently disable reuse).
     """
 
-    def __init__(self, capacity: int = 16):
+    def __init__(self, capacity: int = 16, max_bytes: int | None = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.capacity = capacity
+        self.max_bytes = max_bytes
         self._entries: OrderedDict[str, Any] = OrderedDict()
+        self._nbytes: dict[str, int] = {}
         self._lock = threading.Lock()
+        self.total_bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -84,14 +107,25 @@ class PlanCache:
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
+                self.total_bytes -= self._nbytes.pop(key)
+            nbytes = plan_nbytes(plan)
             self._entries[key] = plan
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
+            self._nbytes[key] = nbytes
+            self.total_bytes += nbytes
+            while len(self._entries) > self.capacity or (
+                self.max_bytes is not None
+                and self.total_bytes > self.max_bytes
+                and len(self._entries) > 1
+            ):
+                old_key, _ = self._entries.popitem(last=False)
+                self.total_bytes -= self._nbytes.pop(old_key)
                 self.evictions += 1
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._nbytes.clear()
+            self.total_bytes = 0
             self.hits = self.misses = self.evictions = 0
 
     def stats(self) -> dict:
@@ -99,6 +133,8 @@ class PlanCache:
         return {
             "size": len(self._entries),
             "capacity": self.capacity,
+            "bytes": self.total_bytes,
+            "max_bytes": self.max_bytes,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,

@@ -559,7 +559,9 @@ def resolve_plan(a: CSR, b: CSR, fm_cap: int, policy: str, cache, key=None):
 
 
 def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
-           pad_policy: str | None = None, plan_cache=None) -> SpgemmResult:
+           pad_policy: str | None = None, plan_cache=None,
+           mesh=None, mesh_axis: str = "data",
+           b_placement: str = "replicated") -> SpgemmResult:
     """Full two-phase SpGEMM with the KKSPGEMM meta-algorithm's method choice
     (see core/meta.py for the heuristics).
 
@@ -574,6 +576,12 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         compression would add work, not save it — its stats (cf/cmrf/
         compressed) are therefore only present on the dense path; use
         ``symbolic()`` directly to inspect compression on any matrix.
+    mesh: a JAX mesh routes the multiply through ``repro.dist``: C's rows
+        are 1-D partitioned over ``mesh_axis``, the sharded plan comes from
+        (and lands in) the mesh-aware plan cache, and the numeric phase runs
+        under shard_map in one dispatch. ``b_placement`` picks "replicated"
+        (B everywhere, zero communication) or "allgather" (B row-sharded,
+        one values-only all-gather per call). Implies the sparse method.
 
     The dense method returns ``plan=None``: KKDENSE has no product->slot map
     and therefore no Reuse fast path. Callers that need structure reuse (or a
@@ -583,6 +591,16 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     from repro.core.plan_cache import default_plan_cache
 
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    if mesh is not None:
+        if method == "dense":
+            raise ValueError(
+                "mesh= requires the sparse method: KKDENSE has no "
+                "product->slot map, so it cannot pin a sharded plan")
+        from repro.dist import sharded_spgemm  # cycle-free late import
+
+        return sharded_spgemm(a, b, mesh, axis=mesh_axis,
+                              b_placement=b_placement, pad_policy=policy,
+                              plan_cache=plan_cache)
     stats: dict = {"pad_policy": policy}
     if method == "auto":
         method = choose_method(a, b, stats)  # shape-only heuristics

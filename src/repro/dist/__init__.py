@@ -1,0 +1,71 @@
+"""repro.dist — the sharded two-phase SpGEMM subsystem.
+
+The paper's Reuse case pays off when symbolic structures are reused across
+numeric calls; Buluç & Gilbert (arXiv:1006.2183) and Azad et al.
+(arXiv:1510.00844) show SpGEMM only reaches scale when that node-level
+kernel composes with a distributed decomposition. This package is that
+composition: the full plan lifecycle lifted onto a JAX mesh.
+
+    ShardedPlan          — stacked per-shard SpgemmPlan, uniform bucketed
+                           caps, pinned value-routing perms (plan.py)
+    build_sharded_plan   — one sharded symbolic pass + one host cap-sync
+    ShardedReuseExecutor — pin per-shard plans once, replay numeric under
+                           shard_map as ONE dispatch; apply_batched vmaps
+                           stacked values across the mesh (executor.py)
+    sharded_spgemm       — the entry point behind spgemm(..., mesh=...)
+    dist_plan_key        — mesh-aware cache key: (structure, S, placement)
+    default_dist_plan_cache — bytes-bounded LRU of sharded plans
+
+B placements (see core/distributed.py, the partitioning/halo layer):
+``replicated`` trades memory for zero communication — the right default
+when B fits every device (the paper notes each row of B is read ~delta_A
+times). ``allgather`` row-shards B and pays one all-gather per replay —
+but only of *values*: the structure all-gather and concat are hoisted to
+plan-build time, which is what makes pinning a sharded plan worthwhile for
+serving loops. Pin a sharded plan whenever the same structure replays more
+than a handful of times per mesh (multigrid V-cycles, graph analytics with
+changing weights); for one-shot multiplies ``distributed_spgemm`` is
+simpler and equally fast.
+
+Also here: compressed collectives for bandwidth-bound exchanges
+(collectives.py) and GPipe-style pipeline parallelism (pipeline.py) — the
+communication substrate the scaled system runs on.
+"""
+from repro.dist.collectives import (
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+    topk_compress,
+    topk_decompress,
+)
+from repro.dist.executor import ShardedReuseExecutor, sharded_spgemm
+from repro.dist.pipeline import pipeline_forward
+from repro.dist.plan import (
+    B_PLACEMENTS,
+    ShardedPlan,
+    build_sharded_plan,
+    dist_expand_and_sort,
+)
+from repro.dist.plan_cache import (
+    DEFAULT_DIST_CACHE_BYTES,
+    default_dist_plan_cache,
+    dist_plan_key,
+)
+
+__all__ = [
+    "B_PLACEMENTS",
+    "ShardedPlan",
+    "ShardedReuseExecutor",
+    "build_sharded_plan",
+    "dist_expand_and_sort",
+    "sharded_spgemm",
+    "dist_plan_key",
+    "default_dist_plan_cache",
+    "DEFAULT_DIST_CACHE_BYTES",
+    "compressed_psum",
+    "quantize_int8",
+    "dequantize_int8",
+    "topk_compress",
+    "topk_decompress",
+    "pipeline_forward",
+]

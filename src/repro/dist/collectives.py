@@ -1,0 +1,66 @@
+"""Compressed collectives for bandwidth-bound mesh exchanges.
+
+Distributed SpGEMM (and the LM substrate's data-parallel training loop) is
+communication-bound exactly where the node-level kernel is bandwidth-bound,
+so the wire format matters as much as the kernel. Two standard compressions:
+
+* **int8 quantized all-reduce** (``compressed_psum``): operands are scaled
+  per last-axis group to int8, all-gathered in the compressed format (4x
+  fewer wire bytes than f32), and dequantize-reduced locally into the mean;
+* **top-k sparsification** (``topk_compress``/``topk_decompress``): keep the
+  k largest-magnitude entries plus a local residual, the error-feedback
+  scheme of gradient-sparsification training.
+
+Both are pure jittable functions, usable inside ``shard_map`` bodies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_int8(x: jax.Array):
+    """Per last-axis-group symmetric int8 quantization -> (q, scale)."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, jnp.asarray(1e-12, x.dtype))
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_int8(q: jax.Array, s: jax.Array, shape) -> jax.Array:
+    """Inverse of ``quantize_int8``."""
+    return (q.astype(s.dtype) * s).reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis: str) -> jax.Array:
+    """Mean over the mesh axis with int8 wire format.
+
+    Each shard quantizes locally, all-gathers the int8 payload (+ one f32
+    scale per group), and reduces after dequantizing — the collective moves
+    ~4x fewer bytes than an f32 psum at ~1e-2 absolute error for unit-scale
+    operands. Must run inside a ``shard_map`` over ``axis``.
+    """
+    q, s = quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis)  # (S, ...) int8 on the wire
+    sg = jax.lax.all_gather(s, axis)
+    return jnp.mean(qg.astype(s.dtype) * sg, axis=0)
+
+
+def topk_compress(x: jax.Array, k: int):
+    """Keep the k largest-|x| entries -> (values, flat_indices, residual).
+
+    The residual is what error-feedback training folds into the next step:
+    ``decompress(v, i) + residual == x`` exactly.
+    """
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    dec = jnp.zeros_like(flat).at[idx].set(vals)
+    return vals, idx, (flat - dec).reshape(x.shape)
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    """Scatter compressed entries back into a dense array of ``shape``."""
+    n = int(np.prod(shape))
+    return jnp.zeros((n,), vals.dtype).at[idx].set(vals).reshape(shape)

@@ -1,0 +1,43 @@
+"""Mesh-aware plan cache: sharded plans keyed by structure AND decomposition.
+
+A ``ShardedPlan``'s arrays depend on exactly three things: the structural
+identity of the multiply (``core.plan_cache.structure_key`` — row pointers,
+live columns, bucketed caps, pad policy), the shard count of the mesh axis
+it was partitioned over, and the B placement (the concat layout and value
+perms differ between ``replicated`` and ``allgather``). ``dist_plan_key``
+composes those into one cache key, so repeated structures on the same
+decomposition never re-shard or rebuild — and the same structure on a
+*different* mesh shape correctly misses.
+
+Storage reuses ``core.plan_cache.PlanCache`` unchanged: the entry-count and
+``max_bytes`` LRU bounds apply to sharded plans too (``plan_nbytes`` sums
+array leaves generically). The default cache carries a 256 MiB bytes bound —
+sharded plans pin S-times-stacked replay maps, so unbounded hoarding costs
+memory S times faster than the single-device cache.
+"""
+from __future__ import annotations
+
+from repro.core.plan_cache import PlanCache
+
+DEFAULT_DIST_CACHE_BYTES = 256 << 20
+
+
+def dist_plan_key(structure_key: str, num_shards: int,
+                  b_placement: str) -> str:
+    """Compose the mesh-aware cache key.
+
+    Only the shard count (not device ids or axis name) joins the key: the
+    plan's arrays are a pure function of (structure, S, placement), so two
+    meshes with the same axis size share one entry — the replay jit retraces
+    per concrete mesh, the plan does not rebuild.
+    """
+    return f"{structure_key}:S{num_shards}:{b_placement}"
+
+
+_DEFAULT_DIST_CACHE = PlanCache(capacity=16,
+                                max_bytes=DEFAULT_DIST_CACHE_BYTES)
+
+
+def default_dist_plan_cache() -> PlanCache:
+    """The module-level mesh-aware cache used when none is passed."""
+    return _DEFAULT_DIST_CACHE

@@ -17,6 +17,7 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.compat import use_mesh  # noqa: E402
 from repro.configs import SHAPES, all_cells, get_config, skip_reason  # noqa: E402
 from repro.launch.cells import build_cell  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -28,7 +29,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
     cfg = get_config(arch, smoke=smoke)
     cell = build_cell(arch, shape_name, mesh, smoke=smoke)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = cell.lower()
         t_lower = time.time() - t0
         compiled = lowered.compile()

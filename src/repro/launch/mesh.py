@@ -8,22 +8,26 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
 from repro.models.sharding import ShardingRules
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for the 8-device subprocess tests."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
+
+
+def make_data_mesh(num_devices: int | None = None, axis: str = "data"):
+    """1-D mesh over ``num_devices`` (default: all) for sharded SpGEMM —
+    the decomposition ``repro.dist`` and ``spgemm(..., mesh=...)`` expect."""
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return make_mesh((n,), (axis,))
 
 
 def rules_for_mesh(mesh) -> ShardingRules:

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.layers import rms_norm
 from repro.models.sharding import ShardingRules
@@ -181,7 +182,7 @@ def moe_layer(p, x, cfg: ModelConfig, rules: ShardingRules,
             return jax.lax.psum_scatter(y, tp, scatter_dimension=1, tiled=True)
         return jax.lax.psum(y, tp)
 
-    y = jax.shard_map(
+    y = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(

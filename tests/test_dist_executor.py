@@ -1,0 +1,205 @@
+"""repro.dist acceptance tests on 8 fake host devices (subprocess: the
+device-count flag must be set before jax initializes, and the main test
+process must keep seeing 1 device).
+
+Covers the sharded-executor contract: bitwise equality with the
+single-device ReuseExecutor after merge_shards, one structure hash and zero
+retraces across >= 8 replays, mesh-aware plan-cache hits, batched replay,
+and the degenerate shard layouts (indivisible m, empty shards).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+def test_sharded_executor_bitwise_and_telemetry():
+    """Acceptance: merge(apply(...)) == single-device executor BITWISE for
+    both placements; one structure_key hash at pin; zero retraces and zero
+    hashes across 8 replays."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core import (HASH_COUNTS, PlanCache, ReuseExecutor,
+                                reset_hash_counts, reset_trace_counts)
+        from repro.core.spgemm import TRACE_COUNTS
+        from repro.dist import ShardedReuseExecutor
+        from repro.sparse import random_csr
+
+        mesh = make_mesh((8,), ("data",))
+        a = random_csr(96, 64, 4.0, 1)
+        b = random_csr(64, 80, 3.0, 2)
+        ref = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+        want = ref.to_csr(ref.apply(a.values, b.values))
+        want_nnz = int(want.indptr[-1])
+
+        for placement in ("replicated", "allgather"):
+            reset_hash_counts()
+            ex = ShardedReuseExecutor.from_matrices(
+                a, b, mesh, b_placement=placement, plan_cache=PlanCache())
+            assert sum(HASH_COUNTS.values()) == 1  # the one pin hash
+            c = ex.merge(ex.apply(a.values, b.values))
+            nnz = int(c.indptr[-1])
+            assert nnz == want_nnz
+            np.testing.assert_array_equal(np.asarray(c.indptr),
+                                          np.asarray(want.indptr))
+            np.testing.assert_array_equal(np.asarray(c.indices)[:nnz],
+                                          np.asarray(want.indices)[:nnz])
+            np.testing.assert_array_equal(np.asarray(c.values)[:nnz],
+                                          np.asarray(want.values)[:nnz])
+
+            reset_trace_counts(); reset_hash_counts()
+            rng = np.random.default_rng(0)
+            for _ in range(8):
+                av = jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32)
+                bv = jnp.asarray(rng.standard_normal(b.nnz_cap), jnp.float32)
+                jax.block_until_ready(ex.apply(av, bv))
+            assert sum(TRACE_COUNTS.values()) == 0, dict(TRACE_COUNTS)
+            assert sum(HASH_COUNTS.values()) == 0, dict(HASH_COUNTS)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_spgemm_mesh_entry_and_cache():
+    """spgemm(mesh=...) routes through repro.dist: oracle-correct result,
+    mesh stats recorded, and a repeated structure hits the mesh-aware cache
+    (no re-shard, no rebuild)."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core import PlanCache, spgemm
+        from repro.sparse import CSR, random_csr
+        from repro.sparse.oracle import dense_spgemm_oracle
+
+        mesh = make_mesh((8,), ("data",))
+        cache = PlanCache()
+        a = random_csr(96, 64, 4.0, 1)
+        b = random_csr(64, 80, 3.0, 2)
+        res = spgemm(a, b, mesh=mesh, plan_cache=cache)
+        np.testing.assert_allclose(np.asarray(res.c.to_dense()),
+                                   dense_spgemm_oracle(a, b),
+                                   rtol=1e-4, atol=1e-4)
+        assert res.stats["cache"] == "miss"
+        assert res.stats["num_shards"] == 8
+        assert res.stats["b_placement"] == "replicated"
+        assert res.stats["mesh_shape"] == (8,)
+
+        rng = np.random.default_rng(0)
+        a2 = CSR(a.indptr, a.indices,
+                 jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32),
+                 a.shape)
+        res2 = spgemm(a2, b, mesh=mesh, plan_cache=cache)
+        assert res2.stats["cache"] == "hit"
+        np.testing.assert_allclose(np.asarray(res2.c.to_dense()),
+                                   dense_spgemm_oracle(a2, b),
+                                   rtol=1e-4, atol=1e-4)
+        # dense method cannot shard
+        try:
+            spgemm(a, b, method="dense", mesh=mesh)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("dense + mesh should raise")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_apply_batched_matches_per_call():
+    """apply_batched == per-call apply bitwise for stacked/shared operands
+    on both placements (one dispatch per batch across the mesh)."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core import PlanCache
+        from repro.dist import ShardedReuseExecutor
+        from repro.sparse import random_csr
+
+        mesh = make_mesh((8,), ("data",))
+        a = random_csr(48, 40, 3.0, 21)
+        b = random_csr(40, 36, 2.0, 22)
+        rng = np.random.default_rng(1)
+        a_stack = jnp.asarray(rng.standard_normal((5, a.nnz_cap)), jnp.float32)
+        b_stack = jnp.asarray(rng.standard_normal((5, b.nnz_cap)), jnp.float32)
+        for placement in ("replicated", "allgather"):
+            ex = ShardedReuseExecutor.from_matrices(
+                a, b, mesh, b_placement=placement, plan_cache=PlanCache())
+            got = ex.apply_batched(a_stack, b_stack)
+            assert got.shape == (5, ex.num_shards, ex.nnz_cap)
+            for i in range(5):
+                np.testing.assert_array_equal(
+                    np.asarray(got[i]),
+                    np.asarray(ex.apply(a_stack[i], b_stack[i])))
+            # shared unbatched B (the fixed-prolongator serving shape)
+            got_b = ex.apply_batched(a_stack, b.values)
+            for i in range(5):
+                np.testing.assert_array_equal(
+                    np.asarray(got_b[i]),
+                    np.asarray(ex.apply(a_stack[i], b.values)))
+            try:
+                ex.apply_batched(a_stack[0], b.values)
+            except ValueError:
+                pass
+            else:
+                raise AssertionError("unbatched pair should raise")
+            # device-side merge_values == host merge's live value layout
+            one = ex.apply(a_stack[0], b_stack[0])
+            merged = ex.merge(one)
+            nnz = int(merged.indptr[-1])
+            mv = ex.merge_values(one)
+            assert mv.shape == (nnz,)
+            np.testing.assert_array_equal(np.asarray(mv),
+                                          np.asarray(merged.values)[:nnz])
+            # batched output must be rejected by the merge paths
+            for bad in (ex.merge, ex.merge_values):
+                try:
+                    bad(got)
+                except ValueError:
+                    pass
+                else:
+                    raise AssertionError("batched values should raise")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_degenerate_layouts():
+    """Indivisible m and S > m (whole shards empty) stay oracle-correct
+    across the mesh for both placements."""
+    out = run_sub("""
+        import numpy as np
+        from repro.compat import make_mesh
+        from repro.core import PlanCache
+        from repro.dist import ShardedReuseExecutor
+        from repro.sparse import random_csr
+        from repro.sparse.oracle import dense_spgemm_oracle
+
+        mesh = make_mesh((8,), ("data",))
+        for m in (91, 5):
+            a = random_csr(m, 32, 3.0, m)
+            b = random_csr(32, 24, 2.0, m + 1)
+            want = dense_spgemm_oracle(a, b)
+            for placement in ("replicated", "allgather"):
+                ex = ShardedReuseExecutor.from_matrices(
+                    a, b, mesh, b_placement=placement, plan_cache=PlanCache())
+                c = ex.merge(ex.apply(a.values, b.values))
+                np.testing.assert_allclose(np.asarray(c.to_dense()), want,
+                                           rtol=1e-4, atol=1e-4)
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,152 @@
+"""Partitioning-layer round-trips (core/distributed.py under repro.dist).
+
+Host-level coverage for the 1-D row decomposition against the numpy
+oracles: indivisible row counts, shards beyond the row count (empty
+shards), empty rows, value-map consistency, the all-gather B placement,
+and the round_capacity bucketing contract (satellites of the repro.dist
+issue). Runs on a single device — the mesh-wide paths live in
+tests/test_dist_executor.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import round_capacity
+from repro.core.distributed import (
+    allgather_value_perm,
+    concat_csr_shards,
+    distributed_spgemm,
+    merge_shards,
+    partition_rows,
+    partition_value_map,
+    row_block_bounds,
+    shard_cap,
+)
+from repro.sparse import CSR, random_csr
+from repro.sparse.oracle import dense_spgemm_oracle
+
+
+def _dense(c: CSR) -> np.ndarray:
+    return np.asarray(c.to_dense())
+
+
+def _with_empty_rows(m: int, k: int, seed: int) -> CSR:
+    """Matrix whose even rows are empty (plus a fully-empty tail block)."""
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((m, k)).astype(np.float32)
+    dense[::2] = 0.0
+    dense[m - max(m // 4, 1):] = 0.0
+    return CSR.from_dense(dense)
+
+
+@pytest.mark.parametrize("m,num_shards", [
+    (96, 8),   # divisible
+    (97, 8),   # m % S != 0: last shard padded
+    (91, 8),   # last shard several padded rows
+    (5, 8),    # S > m: shards 5..7 completely empty
+    (1, 4),    # single row
+])
+def test_partition_merge_roundtrip(m, num_shards):
+    a = random_csr(m, 40, 3.0, seed=m + num_shards)
+    a_sh = partition_rows(a, num_shards)
+    back = merge_shards(a_sh, m)
+    np.testing.assert_array_equal(_dense(back), _dense(a))
+    np.testing.assert_array_equal(np.asarray(back.indptr), np.asarray(a.indptr))
+
+
+def test_partition_merge_roundtrip_empty_rows():
+    a = _with_empty_rows(37, 23, seed=3)
+    a_sh = partition_rows(a, 6)
+    back = merge_shards(a_sh, a.m)
+    np.testing.assert_array_equal(_dense(back), _dense(a))
+
+
+def test_partition_caps_are_bucketed():
+    """Satellite: shard caps come from round_capacity, not ad-hoc -(-x//8)*8,
+    so shards land in the same capacity buckets as the single-device path."""
+    a = random_csr(100, 50, 3.0, seed=11)
+    for policy in ("pow2", "exact8"):
+        cap = shard_cap(a, 8, policy)
+        bounds = row_block_bounds(a, 8)
+        assert cap == round_capacity(int(np.max(np.diff(bounds))), policy)
+        assert partition_rows(a, 8, policy).indices.shape[1] == cap
+
+
+def test_concat_csr_shards_roundtrip():
+    """Jittable concat of row shards == the original matrix (padded rows of
+    the last shard become empty trailing rows)."""
+    a = random_csr(91, 33, 2.5, seed=5)
+    S = 8
+    a_sh = partition_rows(a, S)
+    glob = concat_csr_shards(a_sh.indptr, a_sh.indices, a_sh.values, a.k)
+    m_pad = S * a_sh.m_loc
+    assert glob.shape == (m_pad, a.k)
+    want = np.zeros((m_pad, a.k), np.float32)
+    want[: a.m] = _dense(a)
+    np.testing.assert_array_equal(_dense(glob), want)
+
+
+def test_concat_csr_shards_empty_shards():
+    a = _with_empty_rows(10, 12, seed=9)
+    S = 8
+    a_sh = partition_rows(a, S)
+    glob = concat_csr_shards(a_sh.indptr, a_sh.indices, a_sh.values, a.k)
+    want = np.zeros((S * a_sh.m_loc, a.k), np.float32)
+    want[: a.m] = _dense(a)
+    np.testing.assert_array_equal(_dense(glob), want)
+
+
+def test_partition_value_map_matches_partition_rows():
+    """values[perm] must reproduce partition_rows' value sharding on every
+    live slot — the invariant the pinned replay relies on."""
+    a = random_csr(57, 31, 3.0, seed=21)
+    S = 8
+    a_sh = partition_rows(a, S)
+    perm = partition_value_map(a, S)
+    assert perm.shape == a_sh.values.shape
+    got = np.asarray(a.values)[perm]
+    ip = np.asarray(a_sh.indptr)
+    for s in range(S):
+        nnz_s = ip[s, -1]
+        np.testing.assert_array_equal(got[s, :nnz_s],
+                                      np.asarray(a_sh.values)[s, :nnz_s])
+
+
+def test_allgather_value_perm_matches_concat():
+    """Stacked shard values routed through the perm == concat_csr_shards'
+    value layout on every live slot (the hoisted-structure contract)."""
+    b = random_csr(43, 29, 2.0, seed=31)
+    S = 8
+    b_sh = partition_rows(b, S)
+    glob = concat_csr_shards(b_sh.indptr, b_sh.indices, b_sh.values, b.k)
+    perm = allgather_value_perm(b_sh)
+    got = np.asarray(b_sh.values).reshape(-1)[perm]
+    nnz = int(np.asarray(glob.indptr)[-1])
+    np.testing.assert_array_equal(got[:nnz], np.asarray(glob.values)[:nnz])
+
+
+@pytest.mark.parametrize("placement", ["replicated", "allgather"])
+@pytest.mark.parametrize("m", [96, 91, 5])
+def test_distributed_spgemm_host_mesh(placement, m):
+    """Full driver vs the dense oracle on the whole host mesh: indivisible
+    row counts and empty shards, both B placements. Under tier-1 this is a
+    1-device mesh; the CI dist job forces 8 host devices, so the same test
+    exercises the shard_map paths mesh-wide in-process (the subprocess
+    versions live in tests/test_distributed.py / test_dist_executor.py)."""
+    from repro.launch.mesh import make_data_mesh
+
+    a = random_csr(m, 64, 4.0, seed=m)
+    b = random_csr(64, 48, 3.0, seed=m + 1)
+    c = distributed_spgemm(a, b, make_data_mesh(), b_placement=placement)
+    np.testing.assert_allclose(_dense(c), dense_spgemm_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_distributed_spgemm_empty_rows_oracle():
+    from repro.launch.mesh import make_data_mesh
+
+    a = _with_empty_rows(29, 16, seed=41)
+    b = random_csr(16, 20, 2.0, seed=42)
+    c = distributed_spgemm(a, b, make_data_mesh())
+    np.testing.assert_allclose(_dense(c), dense_spgemm_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)

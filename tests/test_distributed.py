@@ -27,11 +27,11 @@ def run_sub(body: str, devices: int = 8) -> str:
 def test_distributed_spgemm():
     out = run_sub("""
         import numpy as np, jax
+        from repro.compat import make_mesh
         from repro.sparse import random_csr
         from repro.sparse.oracle import dense_spgemm_oracle
         from repro.core import distributed_spgemm
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         a = random_csr(96, 64, 4.0, 1)
         b = random_csr(64, 80, 3.0, 2)
         want = dense_spgemm_oracle(a, b)
@@ -74,7 +74,8 @@ def test_tp_train_step_matches_single_device():
                         step=NamedSharding(mesh, P()))
         rep = NamedSharding(mesh, P())
         m_sh = {"grad_norm": rep, "lr": rep, "loss": rep}
-        with jax.set_mesh(mesh):
+        from repro.compat import use_mesh
+        with use_mesh(mesh):
             p2, _, m2 = jax.jit(make_train_step(cfg, rules, AdamWConfig(),
                                                 mesh=mesh),
                                 out_shardings=(p_sh, o_sh, m_sh))(params, opt, batch)
@@ -102,7 +103,8 @@ def test_moe_shard_map_matches_local():
         l1, _ = forward(params, batch, cfg, NO_SHARDING, remat=False)
         mesh = make_test_mesh((2, 4))
         rules = rules_for_mesh(mesh)
-        with jax.set_mesh(mesh):
+        from repro.compat import use_mesh
+        with use_mesh(mesh):
             l2 = jax.jit(lambda p, b: forward(p, b, cfg, rules, mesh=mesh,
                                               remat=False)[0])(params, batch)
         # capacity differs between 1-shard and 4-shard dispatch; compare loosely
@@ -117,6 +119,7 @@ def test_compressed_psum_and_topk():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.dist import (compressed_psum, quantize_int8, dequantize_int8,
                                 topk_compress, topk_decompress)
         x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 128)),
@@ -124,12 +127,11 @@ def test_compressed_psum_and_topk():
         q, s = quantize_int8(x)
         xq = dequantize_int8(q, s, x.shape)
         np.testing.assert_allclose(np.asarray(xq), np.asarray(x), atol=2e-2)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         def f(xs):
             return compressed_psum(xs, "data")
-        got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                                    out_specs=P("data")))(x)
+        got = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                                out_specs=P("data")))(x)
         want = jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape)
         # compressed mean ~= exact mean
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-2)
@@ -173,10 +175,10 @@ def test_elastic_checkpoint_reshard():
 def test_pipeline_parallel_forward():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.dist.pipeline import pipeline_forward
         # 4-stage pipeline on a 'pipe' mesh axis vs serial execution
-        mesh = jax.make_mesh((4,), ("pipe",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("pipe",))
         rng = np.random.default_rng(0)
         d = 16
         ws = jnp.asarray(rng.standard_normal((4, d, d)) * 0.3, jnp.float32)

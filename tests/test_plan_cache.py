@@ -18,6 +18,7 @@ from repro.core import (
     PlanCache,
     default_plan_cache,
     numeric_reuse,
+    plan_nbytes,
     reset_trace_counts,
     round_capacity,
     spgemm,
@@ -186,6 +187,65 @@ def test_lru_eviction_bound():
     assert spgemm(a0, b0, method="sparse", plan_cache=cache).stats["cache"] == "miss"
     a2, b2 = mats[2]
     assert spgemm(a2, b2, method="sparse", plan_cache=cache).stats["cache"] == "hit"
+
+
+def test_bytes_bound_eviction():
+    """max_bytes evicts LRU entries once cached plans exceed the budget —
+    the accounting bound for executors pinning plans outside the cache."""
+    a = random_csr(24, 24, 3.0, 7)
+    b = random_csr(24, 24, 3.0, 8)
+    probe = spgemm(a, b, method="sparse", plan_cache=PlanCache()).plan
+    one = plan_nbytes(probe)
+    assert one > 0
+    # room for ~2 same-sized plans, generous entry capacity
+    cache = PlanCache(capacity=16, max_bytes=int(one * 2.5))
+    mats = [
+        (random_csr(24, 24, 3.0, s), random_csr(24, 24, 3.0, s + 90))
+        for s in (1, 2, 3)
+    ]
+    for a_i, b_i in mats:
+        spgemm(a_i, b_i, method="sparse", plan_cache=cache)
+    assert cache.evictions >= 1
+    assert cache.total_bytes <= cache.max_bytes
+    assert cache.total_bytes == sum(cache._nbytes.values())
+    # newest structure stayed resident
+    a2, b2 = mats[2]
+    assert spgemm(a2, b2, method="sparse", plan_cache=cache).stats["cache"] == "hit"
+    st = cache.stats()
+    assert st["bytes"] == cache.total_bytes and st["max_bytes"] == cache.max_bytes
+
+
+def test_bytes_bound_keeps_newest_oversized_entry():
+    """A single plan bigger than max_bytes is still stored (refusing it
+    would silently disable reuse); everything older is evicted."""
+    a = random_csr(30, 30, 3.0, 17)
+    b = random_csr(30, 30, 3.0, 18)
+    cache = PlanCache(capacity=8, max_bytes=1)
+    res = spgemm(a, b, method="sparse", plan_cache=cache)
+    assert len(cache) == 1
+    assert spgemm(a, b, method="sparse",
+                  plan_cache=cache).stats["cache"] == "hit"
+    assert cache.total_bytes == plan_nbytes(res.plan)
+
+
+def test_bytes_accounting_on_overwrite_and_clear():
+    cache = PlanCache(capacity=4, max_bytes=1 << 30)
+    a = random_csr(20, 20, 2.0, 27)
+    b = random_csr(20, 20, 2.0, 28)
+    res = spgemm(a, b, method="sparse", plan_cache=cache)
+    key = next(iter(cache._entries))  # the key spgemm stored under
+    before = cache.total_bytes
+    cache.put(key, res.plan)  # overwrite same key: no double counting
+    assert cache.total_bytes == before
+    cache.clear()
+    assert cache.total_bytes == 0 and len(cache) == 0
+
+
+def test_plan_cache_rejects_bad_bounds():
+    with pytest.raises(ValueError):
+        PlanCache(capacity=0)
+    with pytest.raises(ValueError):
+        PlanCache(max_bytes=0)
 
 
 def test_default_cache_used_by_public_entry_point():
