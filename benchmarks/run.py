@@ -14,6 +14,11 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        loop; throughput in multiplies/s
   bench_compile      — recompile counts + plan-cache hit rate: same-bucket
                        structures share executables, repeats hit the cache
+  bench_accumulators — the paper's accumulator trade-off: dense-acc vs
+                       sorted-segment vs LP-hash numeric phase across
+                       avg-row-flop regimes, with choose_kernel's pick and
+                       the measured winner per regime (the Figure-style
+                       crossover, tracked per-PR via BENCH_accum_*.json)
   bench_fm_groups    — Fig 8: meta-vs-fixed speedup grouped by f_m
   bench_distributed  — §multi-pod: 1-D row-wise SpGEMM scaling terms
   bench_dist         — repro.dist sharded-plan replay: latency per replay
@@ -256,6 +261,69 @@ def bench_compile():
           "hit_rate": cs["hit_rate"]})
 
 
+def bench_accumulators(quick: bool = False):
+    """Accumulator crossover (the paper's central performance claim): time
+    the FULL numeric phase (structure + values, from-scratch) through each
+    accumulator data structure across avg-row-flop regimes straddling the
+    KKLP cutoff (256) — all three arms pay their structure-extraction work,
+    so the comparison is apples-to-apples:
+
+      dense_acc — XLA dense (m, k) scatter accumulator + nonzero-scan CSR
+                  extraction (``numeric_dense_acc``, the KKDENSE position)
+      segsum    — single-expansion pipeline + sorted-segment accumulation
+                  (``numeric_fresh``, the Thread-Flat-Parallel position)
+      lp_hash   — same pipeline, values through the Pallas LP-hash
+                  accumulator (``numeric_lp``, the KKLP position)
+
+    Each row records avg_row_flops, ``choose_kernel``'s pick and that arm's
+    own backend (dense_acc/segsum are compiled XLA everywhere; lp_hash is
+    Pallas on TPU, interpret mode elsewhere); the ``crossover`` row per
+    regime names the measured winner so the BENCH_accum_*.json trajectory
+    shows where the crossover sits. Off-TPU the LP arm pays interpret
+    overhead, so the winner comparison is not hardware-meaningful there —
+    the crossover row carries ``comparable=0`` in that case and readers of
+    the artifact should track the dense/segsum columns plus the
+    choose_kernel pick until real-TPU CI exists.
+    """
+    from repro.core import choose_kernel, numeric_fresh, numeric_lp
+    from repro.core.spgemm import numeric_dense_acc
+
+    interpret = jax.default_backend() != "tpu"
+    arm_backend = {"dense_acc": "xla", "segsum": "xla",
+                   "lp_hash": "interpret" if interpret else "pallas"}
+    regimes = [
+        ("low_flops", random_csr(128, 128, 3.0, 41), random_csr(128, 128, 3.0, 42)),
+        ("high_flops", random_csr(8, 32, 12.0, 45), random_csr(32, 96, 32.0, 46)),
+    ]
+    if not quick:
+        regimes.insert(1, (
+            "mid_flops", random_csr(64, 96, 8.0, 43), random_csr(96, 128, 8.0, 44)))
+    for name, a, b in regimes:
+        res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+        fm = res.stats["fm"]
+        avg_row_flops = fm / max(a.m, 1)
+        chosen = choose_kernel(a, b, {"fm": fm})
+        fm_cap, nnz_cap = res.stats["fm_cap"], res.stats["nnz_cap"]
+        per: dict[str, float] = {}
+        per["dense_acc"], _ = timeit(
+            lambda: numeric_dense_acc(a, b, fm_cap, nnz_cap))
+        per["segsum"], _ = timeit(
+            lambda: numeric_fresh(a, b, fm_cap, nnz_cap)[0])
+        per["lp_hash"], _ = timeit(
+            lambda: numeric_lp(a, b, fm_cap, nnz_cap, interpret=interpret)[0])
+        for acc, us in per.items():
+            emit(f"accumulators/{name}/{acc}", us,
+                 {"avg_row_flops": avg_row_flops, "fm": fm,
+                  "chosen": chosen, "backend": arm_backend[acc],
+                  "gflops": 2 * fm / (us * 1e-6) / 1e9})
+        winner = min(per, key=per.get)
+        emit(f"accumulators/{name}/crossover", 0.0,
+             {"avg_row_flops": avg_row_flops, "chosen": chosen,
+              "winner": winner, "comparable": int(not interpret),
+              "lp_over_segsum": per["lp_hash"] / per["segsum"],
+              "dense_over_segsum": per["dense_acc"] / per["segsum"]})
+
+
 def bench_fm_groups(results):
     """Fig 8: geometric-mean speedup of kkspgemm vs single fixed method,
     grouped by f_m size."""
@@ -374,12 +442,33 @@ def bench_train_smoke():
              {"tokens_per_s": toks / (us * 1e-6)})
 
 
+# Self-contained benches addressable via --bench (no cross-bench inputs).
+# Each callable takes the --quick flag (most ignore it; bench_accumulators
+# shrinks its regime list).
+BENCHES = {
+    "compile": lambda quick: bench_compile(),
+    "reuse": lambda quick: bench_reuse(),
+    "reuse_batched": lambda quick: bench_reuse_batched(),
+    "accumulators": bench_accumulators,
+    "dist": lambda quick: bench_dist(),
+    "distributed": lambda quick: bench_distributed(),
+    "train_smoke": lambda quick: bench_train_smoke(),
+}
+
+
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
         "--quick", action="store_true",
         help="CI smoke subset: 2 suite cases; compile, reuse and "
              "batched-reuse benches only",
+    )
+    parser.add_argument(
+        "--bench", action="append", metavar="NAME", default=None,
+        choices=sorted(BENCHES),
+        help="run only the named self-contained bench(es); repeatable. "
+             "Combines with --quick (e.g. the CI accumulator artifact runs "
+             "--quick --bench accumulators)",
     )
     parser.add_argument(
         "--json", metavar="PATH", default=None,
@@ -401,7 +490,10 @@ def main(argv: list[str] | None = None) -> None:
                 f"{args.devices}").strip()
     CASES[:] = list(suite())[:2] if args.quick else list(suite())
     print("name,us_per_call,derived")
-    if args.quick:
+    if args.bench:
+        for name in args.bench:
+            BENCHES[name](args.quick)
+    elif args.quick:
         bench_compile()
         bench_reuse()
         bench_reuse_batched()
@@ -413,6 +505,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_reuse()
         bench_reuse_batched()
         bench_compile()
+        bench_accumulators()
         bench_fm_groups(results)
         bench_distributed()
         bench_dist()

@@ -23,6 +23,7 @@ from repro.core.spgemm import (
     host_fm_cap,
     numeric_dense_acc,
     numeric_fresh,
+    numeric_lp,
     numeric_reuse,
     plan_from_sorted,
     reset_trace_counts,
@@ -93,6 +94,7 @@ __all__ = [
     "host_fm_cap",
     "numeric_dense_acc",
     "numeric_fresh",
+    "numeric_lp",
     "numeric_reuse",
     "spgemm",
     "symbolic",

@@ -107,10 +107,19 @@ def lp_init(size: int, dtype=jnp.float32) -> LPState:
 
 def lp_insert(state: LPState, key: jax.Array, val: jax.Array,
               max_occupancy: float = MAX_OCCUPANCY):
-    """Linear-probing insert-or-accumulate with the max-occupancy cutoff."""
+    """Linear-probing insert-or-accumulate with the max-occupancy cutoff.
+
+    ``max_occupancy`` must lie in (0, 1], and the cutoff is clamped to
+    ``size - 1``: at least one ``-1`` sentinel slot must survive, or a table
+    filled with distinct keys would leave the probe loop no empty slot to
+    stop at and it would spin forever.
+    """
+    if not 0.0 < max_occupancy <= 1.0:
+        raise ValueError(
+            f"max_occupancy must be in (0, 1]; got {max_occupancy!r}")
     size = state.ids.shape[0]
     mask = size - 1
-    cutoff = jnp.int32(int(size * max_occupancy))
+    cutoff = jnp.int32(min(int(size * max_occupancy), size - 1))
     h = key & mask
 
     def cond(p):

@@ -26,11 +26,14 @@ and each structure group becomes one batched dispatch.
 Backends: ``backend="xla"`` (the default that ``"auto"`` resolves to)
 replays through ``numeric_reuse``; ``backend="pallas"`` opts into the
 ``kernels/segsum_reuse`` flat-parallel TPU kernel (``interpret=True``
-off-TPU). The Pallas kernel is explicit opt-in — not what ``"auto"`` picks —
-until it has real-TPU compile coverage (CI only exercises interpret mode),
-and it accumulates in f32, so f64 operands route back to XLA. Batched replay
-always uses the XLA path — it is the vmap-friendly formulation, and one
-fused dispatch is the point of batching.
+off-TPU); ``backend="pallas_lp"`` opts into the ``kernels/spgemm_lp``
+LP-hash accumulator replay — the KKLP position, for measuring the paper's
+accumulator trade-off on the replay hot loop. The Pallas kernels are
+explicit opt-in — not what ``"auto"`` picks — until they have real-TPU
+compile coverage (CI only exercises interpret mode), and they accumulate in
+f32, so f64/int operands route back to XLA. Batched replay always uses the
+XLA path — it is the vmap-friendly formulation, and one fused dispatch is
+the point of batching.
 """
 from __future__ import annotations
 
@@ -41,11 +44,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.meta import DEFAULT_PAD_POLICY
+from repro.core.meta import DEFAULT_PAD_POLICY, f32_accumulation_ok
 from repro.core.plan_cache import default_plan_cache, structure_key
 from repro.core.spgemm import (
     SpgemmPlan,
     _note_trace,
+    lp_replay_values,
     numeric_reuse,
     prepare_sparse_inputs,
     resolve_plan,
@@ -53,7 +57,7 @@ from repro.core.spgemm import (
 )
 from repro.sparse.formats import CSR
 
-BACKENDS = ("auto", "xla", "pallas")
+BACKENDS = ("auto", "xla", "pallas", "pallas_lp")
 
 # Dispatch telemetry: counts *calls* (not traces — that's TRACE_COUNTS), so
 # tests can assert grouping really issues one batched dispatch per structure.
@@ -73,13 +77,15 @@ def _resolve_backend(backend: str) -> str:
 
 
 def _replay(plan: SpgemmPlan, a_values, b_values, backend: str, interpret: bool):
-    acc_dtype = jnp.result_type(a_values, b_values)
-    if (backend == "pallas" and jnp.issubdtype(acc_dtype, jnp.floating)
-            and acc_dtype.itemsize <= 4):
+    if backend == "pallas_lp":
+        # shared LP dispatch: Pallas kernel or the exact-XLA dtype fallback
+        return lp_replay_values(plan, a_values, b_values, interpret)[0]
+    if backend == "pallas" and f32_accumulation_ok(a_values.dtype,
+                                                   b_values.dtype):
         from repro.kernels.segsum_reuse import segsum_reuse  # lazy: kernels dep
 
         return segsum_reuse(plan, a_values, b_values, interpret=interpret)
-    # XLA path — also the fallback for f64 (the Pallas kernel accumulates in
+    # XLA path — also the fallback for f64 (the Pallas kernels accumulate in
     # f32, which would halve double precision) and for integer dtypes (f32
     # rounding above 2^24 would break integer exactness).
     return numeric_reuse(plan, a_values, b_values)

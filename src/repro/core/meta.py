@@ -13,6 +13,8 @@ the O(m*k) dense accumulator.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.sparse.formats import CSR
 
 DENSE_K_CUTOFF = 250_000  # paper §3.3
@@ -45,10 +47,36 @@ def round_capacity(x: int, policy: str = DEFAULT_PAD_POLICY) -> int:
     raise ValueError(f"unknown pad_policy {policy!r}; expected one of {PAD_POLICIES}")
 
 
+def f32_accumulation_ok(a_dtype, b_dtype) -> bool:
+    """May the f32-accumulating Pallas kernels see these operand dtypes?
+
+    The one shared predicate behind every kernel-routing decision
+    (``spgemm(method="lp")``, ``ReuseExecutor._replay``,
+    ``kernels.ops.resolve_numeric_kernel``): floating accumulation of at
+    most 4 bytes. f64 would halve double precision; integers would break
+    exactness past 2^24 — both belong on the XLA path.
+    """
+    import jax.numpy as jnp  # local: keep module import-light for the host
+
+    acc = np.result_type(a_dtype, b_dtype)
+    # jnp.issubdtype, not np: numpy does not class ml_dtypes.bfloat16 as
+    # floating, and bf16 operands are exactly what the kernels should accept
+    return bool(jnp.issubdtype(acc, jnp.floating)) and acc.itemsize <= 4
+
+
 def choose_method(a: CSR, b: CSR, stats: dict) -> str:
-    """Return 'dense' or 'sparse' for the XLA numeric phase."""
+    """Return 'dense' or 'sparse' for the XLA numeric phase.
+
+    The dense accumulator is an (m, k) values array in the accumulation dtype
+    plus an (m, k) int32 occupancy mask, so the memory guard must scale with
+    the operand value dtype: hard-coding 4-byte values would undercount f64
+    inputs 2x and let them breach DENSE_BYTES_BUDGET.
+    """
     k = b.k
-    dense_bytes = a.m * k * 4 * 2  # values + occupancy
+    # numpy promotion on purpose: jnp.result_type would canonicalize f64 to
+    # f32 when x64 is disabled and silently restore the undercount
+    val_itemsize = np.result_type(a.values.dtype, b.values.dtype).itemsize
+    dense_bytes = a.m * k * (val_itemsize + 4)  # values + int32 occupancy
     if k < DENSE_K_CUTOFF and dense_bytes <= DENSE_BYTES_BUDGET:
         return "dense"
     return "sparse"
@@ -56,9 +84,21 @@ def choose_method(a: CSR, b: CSR, stats: dict) -> str:
 
 def choose_kernel(a: CSR, b: CSR, stats: dict) -> str:
     """Return 'dense_acc' (KKMEM-position: thread-sequential, modest rows) or
-    'flat_lp' (KKLP-position: flat-parallel for flop-heavy rows) for the
-    Pallas path — the paper's GPU rule on average row flops."""
-    fm = max(stats.get("fm", 0), 1)
+    'flat_lp' (KKLP-position: LP-hash accumulator for flop-heavy rows) for
+    the Pallas path — the paper's GPU rule on average row flops.
+
+    ``stats`` must carry ``fm`` (the total multiplication count, from
+    ``flops_stats``); a missing ``fm`` raises ``KeyError`` rather than
+    silently defaulting to 0, which would always select 'dense_acc' and hide
+    meta-dispatch bugs.
+    """
+    if "fm" not in stats:
+        raise KeyError(
+            "choose_kernel requires stats['fm'] (total multiplications; see "
+            "flops_stats) — a silent fm=0 default would always pick "
+            "'dense_acc'"
+        )
+    fm = max(int(stats["fm"]), 1)
     avg_row_flops = fm / max(a.m, 1)
     return "dense_acc" if avg_row_flops < AVG_ROW_FLOPS_CUTOFF else "flat_lp"
 

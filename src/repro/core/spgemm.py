@@ -277,10 +277,13 @@ def plan_from_sorted(sx: SortedExpansion, k: int, nnz_cap: int) -> SpgemmPlan:
     )
 
 
-def host_fm_cap(a: CSR, b: CSR, pad_to: int = 8) -> int:
-    """Host-side f_m (total products) rounded up — the static expansion size."""
-    fm, _, _ = flops_stats(a, b.row_nnz())
-    fm = int(fm)
+def host_fm_cap(a: CSR, b: CSR, pad_to: int = 8, fm: int | None = None) -> int:
+    """Host-side f_m (total products) rounded up — the static expansion size.
+
+    fm: precomputed product count, if the caller already paid the
+    ``flops_stats`` pass (saves its device->host sync)."""
+    if fm is None:
+        fm = int(flops_stats(a, b.row_nnz())[0])
     return max(-(-fm // pad_to) * pad_to, pad_to)
 
 
@@ -423,6 +426,46 @@ def numeric_reuse(plan: SpgemmPlan, a_values: jax.Array, b_values: jax.Array) ->
     return jnp.zeros((nnz_cap,), acc_dtype).at[plan.seg_ids].add(
         prod, mode="drop", indices_are_sorted=True
     )
+
+
+def lp_replay_values(plan: SpgemmPlan, a_values: jax.Array,
+                     b_values: jax.Array, interpret: bool | None = None):
+    """The one LP-position replay dispatch: Pallas LP-hash kernel when the
+    operand dtypes can accumulate in f32, the exact XLA ``numeric_reuse``
+    otherwise (f64/int). Every LP entry point — ``spgemm(method="lp")``,
+    ``numeric_lp``, ``ReuseExecutor(backend="pallas_lp")`` — routes through
+    here so the fallback rule can never drift between them.
+
+    interpret: None = interpret off-TPU (Pallas lowers only to TPU).
+    Returns (values, backend) with backend in {"pallas", "xla"}.
+    """
+    from repro.core.meta import f32_accumulation_ok  # cycle-free late import
+
+    if f32_accumulation_ok(a_values.dtype, b_values.dtype):
+        from repro.kernels.spgemm_lp import lp_reuse  # cycle-free late import
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return lp_reuse(plan, a_values, b_values, interpret=interpret), "pallas"
+    return numeric_reuse(plan, a_values, b_values), "xla"
+
+
+@partial(jax.jit, static_argnames=("fm_cap", "nnz_cap", "interpret"))
+def numeric_lp(a: CSR, b: CSR, fm_cap: int, nnz_cap: int,
+               interpret: bool = False):
+    """KKLP-position numeric phase: structure via the single-expansion
+    pipeline, values through the Pallas LP-hash accumulator replay
+    (``kernels.spgemm_lp.lp_reuse``; automatic XLA fallback for f64/int).
+    Returns (CSR C, SpgemmPlan) — the same contract as ``numeric_fresh``,
+    selected by ``choose_kernel``'s ``flat_lp`` branch for flop-heavy
+    rows."""
+    _note_trace("numeric_lp")
+    sx = expand_and_sort(a, b, fm_cap)
+    plan = plan_from_sorted(sx, b.k, nnz_cap)
+    values, _ = lp_replay_values(plan, a.values, b.values, interpret=interpret)
+    c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
+            shape=(a.m, b.k))
+    return c, plan
 
 
 @partial(jax.jit, static_argnames=("fm_cap", "nnz_cap"))
@@ -586,16 +629,35 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     The dense method returns ``plan=None``: KKDENSE has no product->slot map
     and therefore no Reuse fast path. Callers that need structure reuse (or a
     ``ReuseExecutor``) must use ``method="sparse"``.
+
+    method="lp" is the KKLP position made explicit: the same single-expansion
+    sparse pipeline (plan, cache, Reuse path all intact) but the numeric
+    values come from the Pallas LP-hash accumulator kernel
+    (``kernels/spgemm_lp.py``; interpret mode off-TPU) — with an automatic
+    XLA fallback for f64/int operand dtypes, which the f32-accumulating
+    kernel must not touch. ``stats["kernel"]`` always records what
+    ``choose_kernel`` would pick ('dense_acc' below 256 avg row flops,
+    'flat_lp' at or above); ``stats["lp_backend"]`` records which backend the
+    lp method actually used ("pallas" or "xla").
     """
-    from repro.core.meta import choose_method  # cycle-free late import
+    from repro.core.meta import choose_kernel, choose_method  # cycle-free
     from repro.core.plan_cache import default_plan_cache
 
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    if method not in ("auto", "dense", "sparse", "lp"):
+        raise ValueError(
+            f"unknown method {method!r}; expected 'auto', 'dense', 'sparse' "
+            f"or 'lp'")
     if mesh is not None:
         if method == "dense":
             raise ValueError(
                 "mesh= requires the sparse method: KKDENSE has no "
                 "product->slot map, so it cannot pin a sharded plan")
+        if method == "lp":
+            raise ValueError(
+                "mesh= does not support method='lp' yet: the sharded replay "
+                "runs the XLA segment-sum only (see ROADMAP: Pallas path "
+                "under shard_map); use method='sparse' on a mesh")
         from repro.dist import sharded_spgemm  # cycle-free late import
 
         return sharded_spgemm(a, b, mesh, axis=mesh_axis,
@@ -609,6 +671,7 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     if method == "dense":
         sizes, sym_stats = symbolic(a, b, compress=compress, pad_policy=policy)
         stats.update(sym_stats)
+        stats["kernel"] = choose_kernel(a, b, stats)  # advisory telemetry
         fm_cap = round_capacity(sym_stats["fm"], policy)
         stats["fm_cap"] = fm_cap
         nnz = int(jnp.sum(sizes))
@@ -619,10 +682,10 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         c = numeric_dense_acc(a, b, fm_cap, nnz_cap)
         return SpgemmResult(c=c, plan=None, stats=stats)
 
-    # "sparse": single-expansion pipeline through the plan cache. Bucket the
-    # input buffer caps *before* any jitted work, so every array shape the
-    # jitted stages (including the f_m scalars) see is a bucket size — that's
-    # what lets same-bucket matrices share executables.
+    # "sparse"/"lp": single-expansion pipeline through the plan cache. Bucket
+    # the input buffer caps *before* any jitted work, so every array shape
+    # the jitted stages (including the f_m scalars) see is a bucket size —
+    # that's what lets same-bucket matrices share executables.
     if plan_cache is None:
         cache = default_plan_cache()
     elif plan_cache is False:
@@ -633,9 +696,14 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     stats["fm"] = fm
     stats["maxrf"] = maxrf
     stats["fm_cap"] = fm_cap
+    stats["kernel"] = choose_kernel(a, b, stats)  # the paper's GPU rule
 
     plan, cache_state = resolve_plan(a, b, fm_cap, policy, cache)
-    values = numeric_reuse(plan, a.values, b.values)
+    if method == "lp":
+        values, stats["lp_backend"] = lp_replay_values(
+            plan, a.values, b.values)
+    else:
+        values = numeric_reuse(plan, a.values, b.values)
     c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
             shape=(a.m, b.k))
     stats["cache"] = cache_state

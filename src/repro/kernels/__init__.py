@@ -13,6 +13,9 @@ Kernels:
                      grid step, plan-steered gathers (the MXU flagship)
   segsum_reuse     — Reuse-case numeric replay: flat-parallel
                      gather-multiply-segment-sum over f_m tiles
+  spgemm_lp        — KKLP numeric phase: the paper's §3.1.2 two-level
+                     linear-probing hash accumulator (50% max-occupancy, L1/L2
+                     spill) in VMEM scratch; plus the lp_reuse replay variant
 """
 from repro.kernels.spgemm_symbolic import spgemm_symbolic, spgemm_symbolic_bucketed
 from repro.kernels.spgemm_numeric import spgemm_numeric, spgemm_numeric_bucketed
@@ -20,12 +23,22 @@ from repro.kernels.grouped_matmul import grouped_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.bsr_spgemm import bsr_spgemm_numeric, plan_bsr_numeric
 from repro.kernels.segsum_reuse import segsum_reuse, segsum_reuse_arrays
+from repro.kernels.spgemm_lp import (
+    lp_reuse,
+    lp_reuse_arrays,
+    spgemm_lp,
+    spgemm_lp_bucketed,
+)
 
 __all__ = [
     "spgemm_symbolic",
     "spgemm_symbolic_bucketed",
     "spgemm_numeric",
     "spgemm_numeric_bucketed",
+    "spgemm_lp",
+    "spgemm_lp_bucketed",
+    "lp_reuse",
+    "lp_reuse_arrays",
     "segsum_reuse",
     "segsum_reuse_arrays",
     "grouped_matmul",

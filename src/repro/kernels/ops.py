@@ -5,26 +5,80 @@ backend dispatch: on non-TPU backends the kernels run in interpret mode
 (Pallas lowers only to TPU), so the same call sites work on the CPU test rig
 and on real hardware. ``impl="xla"`` falls back to the pure-jnp references
 — the dry-run path, since the CPU dry-run cannot lower TPU kernels.
+
+Numeric-phase kernel selection is the paper's GPU rule
+(``core.meta.choose_kernel``): ``kernel="auto"`` routes modest rows to the
+dense-tile kernel (``dense_acc``) and flop-heavy rows (avg row flops >= 256)
+to the LP-hash kernel (``flat_lp``) — and forces the ``xla`` reference path
+for f64/int value dtypes, since the Pallas kernels accumulate in f32.
+``KERNEL_COUNTS`` records every resolved dispatch so tests and benchmarks
+can assert the routing (e.g. that ``flat_lp`` no longer lands on the dense
+accumulator).
 """
 from __future__ import annotations
 
 import functools
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import bitmask_rows
+from repro.core.compression import bitmask_rows, flops_stats
+from repro.core.meta import choose_kernel, f32_accumulation_ok
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.grouped_matmul import TM, grouped_matmul
+from repro.kernels.spgemm_lp import spgemm_lp_bucketed
 from repro.kernels.spgemm_numeric import spgemm_numeric_bucketed
 from repro.kernels.spgemm_symbolic import spgemm_symbolic_bucketed
 from repro.sparse.formats import CSR, csr_to_ell
 
+NUMERIC_KERNELS = ("auto", "dense_acc", "flat_lp", "xla")
+
+# Dispatch telemetry: resolved kernel name per numeric_values call.
+KERNEL_COUNTS: Counter = Counter()
+
+
+def reset_kernel_counts() -> None:
+    KERNEL_COUNTS.clear()
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_numeric_kernel(a: CSR, b: CSR, kernel: str = "auto",
+                           fm: int | None = None) -> str:
+    """Resolve ``kernel`` to a concrete numeric-phase implementation.
+
+    "auto" applies ``core.meta.choose_kernel`` (the paper's avg-row-flops
+    rule) after the dtype guard: f64/int accumulation cannot run on the f32
+    Pallas kernels, so those inputs resolve to "xla" regardless of regime.
+
+    fm: the total multiplication count, if the caller already has it (e.g.
+    from ``spgemm`` stats). Computing it here costs an O(nnz) ``flops_stats``
+    pass plus a device->host sync per call — replay loops over a pinned
+    structure should pass their constant ``fm`` instead of re-paying that.
+    """
+    if kernel not in NUMERIC_KERNELS:
+        raise ValueError(
+            f"unknown kernel {kernel!r}; expected one of {NUMERIC_KERNELS}")
+    f32_ok = f32_accumulation_ok(a.values.dtype, b.values.dtype)
+    if kernel != "auto":
+        # an explicit Pallas kernel the dtypes cannot run correctly must fail
+        # loudly — silently accumulating f64/int in f32 would corrupt results
+        if kernel != "xla" and not f32_ok:
+            raise ValueError(
+                f"kernel={kernel!r} accumulates in f32 and cannot take "
+                f"{a.values.dtype}/{b.values.dtype} operands exactly; "
+                f"use kernel='xla' (what 'auto' resolves to for them)")
+        return kernel
+    if not f32_ok:
+        return "xla"
+    if fm is None:
+        fm = int(flops_stats(a, b.row_nnz())[0])
+    return choose_kernel(a, b, {"fm": fm})
 
 
 def symbolic_rowsizes(a: CSR, b: CSR, *, pad_policy: str | None = None) -> jax.Array:
@@ -43,27 +97,51 @@ def symbolic_rowsizes(a: CSR, b: CSR, *, pad_policy: str | None = None) -> jax.A
 
 
 def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
-                   pad_policy: str | None = None) -> jax.Array:
+                   pad_policy: str | None = None, kernel: str = "auto",
+                   fm: int | None = None) -> jax.Array:
     """Kernel-backed numeric phase: ELL-layout values of C at the symbolic
-    structure ``c_idx``/``c_nnz`` (the Reuse entry point). Widths bucketed."""
+    structure ``c_idx``/``c_nnz`` (the Reuse entry point). Widths bucketed.
+
+    kernel: "auto" (meta-algorithm rule + dtype guard — see
+    ``resolve_numeric_kernel``), "dense_acc" (dense-tile Pallas kernel),
+    "flat_lp" (LP-hash Pallas kernel), or "xla" (pure-jnp reference; the
+    f64/int fallback). Replay loops should pass a concrete ``kernel`` or a
+    precomputed ``fm`` — "auto" without ``fm`` pays an O(nnz) flops pass and
+    a host sync per call to apply the selection rule.
+    """
+    resolved = resolve_numeric_kernel(a, b, kernel, fm=fm)
+    KERNEL_COUNTS[resolved] += 1
     ea = csr_to_ell(a)
     eb = csr_to_ell(b)
+    if resolved == "xla":
+        return ref.spgemm_numeric_ref(
+            ea.indices, ea.values, eb.indices, eb.values, c_idx, c_nnz, b.k)
+    if resolved == "flat_lp":
+        return spgemm_lp_bucketed(
+            ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
+            eb.row_nnz, c_idx, c_nnz, pad_policy=pad_policy,
+            interpret=_interpret(),
+        )
     return spgemm_numeric_bucketed(
         ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
         c_idx, c_nnz, k=b.k, pad_policy=pad_policy, interpret=_interpret(),
     )
 
 
-def pallas_spgemm(a: CSR, b: CSR) -> tuple[jax.Array, jax.Array, jax.Array]:
+def pallas_spgemm(a: CSR, b: CSR, *,
+                  kernel: str = "auto") -> tuple[jax.Array, jax.Array, jax.Array]:
     """Full two-phase kernel pipeline. Returns (c_nnz, c_idx, c_val) with C
     in ELL layout; the host decides rC between the phases (two-phase
-    contract). Structure extraction uses the core sort path."""
+    contract). Structure extraction uses the core sort path; the numeric
+    kernel follows ``kernel`` (default: the meta-algorithm rule)."""
     from repro.core.spgemm import host_fm_cap, numeric_fresh
 
     sizes = symbolic_rowsizes(a, b)
     r_c = max(int(jnp.max(sizes)), 1)
-    # structure via the core path (host-mediated static sizes)
-    fm_cap = host_fm_cap(a, b)
+    # structure via the core path (host-mediated static sizes); one
+    # flops_stats pass serves both the expansion cap and kernel selection
+    fm = int(flops_stats(a, b.row_nnz())[0])
+    fm_cap = host_fm_cap(a, b, fm=fm)
     nnz = int(jnp.sum(sizes))
     nnz_cap = max(-(-nnz // 8) * 8, 8)
     c, _ = numeric_fresh(a, b, fm_cap, nnz_cap)
@@ -72,7 +150,8 @@ def pallas_spgemm(a: CSR, b: CSR) -> tuple[jax.Array, jax.Array, jax.Array]:
         CSR(indptr=c.indptr, indices=c.indices, values=c.values, shape=c.shape),
         r_pad=r_c,
     )
-    vals = numeric_values(a, b, c_ell.indices, c_ell.row_nnz)
+    vals = numeric_values(a, b, c_ell.indices, c_ell.row_nnz, kernel=kernel,
+                          fm=fm)
     return c_ell.row_nnz, c_ell.indices, vals
 
 

@@ -70,6 +70,67 @@ def segsum_reuse_ref(a_slot_s, b_slot_s, seg_ids, a_values, b_values, nnz_cap):
     return jnp.asarray(out)
 
 
+def spgemm_lp_ref(a_idx, a_val, a_nnz, b_idx, b_val, b_nnz, c_idx, c_nnz,
+                  l1_size: int):
+    """Bitwise oracle for the KKLP kernel: per row, replay the Gustavson
+    insert stream through ``core.accumulators.accumulate_row(kind="lp")``
+    (L1 size ``l1_size`` with the 50% max-occupancy rule, L2 sized to hold
+    every spill — the MAXRF guarantee) and read the merged L1+L2 tables at
+    the symbolic structure ``c_idx``/``c_nnz``.
+
+    The stream order is the kernel's: A slots row-major, then the B row's
+    slots; products are f32 multiplies. Host-side loop on purpose — the
+    accumulator ports are the semantic ground truth, not a re-derivation of
+    the kernel's vectorized probe.
+    """
+    import numpy as np
+
+    from repro.core.accumulators import accumulate_row
+
+    a_idx_n, a_nnz_n = np.asarray(a_idx), np.asarray(a_nnz)
+    b_idx_n, b_nnz_n = np.asarray(b_idx), np.asarray(b_nnz)
+    a_val_n = np.asarray(a_val, np.float32)
+    b_val_n = np.asarray(b_val, np.float32)
+    c_idx_n, c_nnz_n = np.asarray(c_idx), np.asarray(c_nnz)
+    m, r_c = c_idx_n.shape
+
+    streams = []
+    for i in range(m):
+        keys, vals = [], []
+        for r in range(int(a_nnz_n[i])):
+            j = int(a_idx_n[i, r])
+            for t in range(int(b_nnz_n[j])):
+                keys.append(int(b_idx_n[j, t]))
+                vals.append(np.float32(a_val_n[i, r]) * np.float32(b_val_n[j, t]))
+        streams.append((keys, vals))
+    cap = max([len(k) for k, _ in streams] + [1])
+
+    out = np.zeros((m, r_c), np.float32)
+    for i, (keys, vals) in enumerate(streams):
+        n_p = len(keys)
+        k_arr = np.zeros(cap, np.int32)
+        v_arr = np.zeros(cap, np.float32)
+        k_arr[:n_p] = keys
+        v_arr[:n_p] = vals
+        valid = np.arange(cap) < n_p
+        l1, l2, _ = accumulate_row(
+            jnp.asarray(k_arr), jnp.asarray(v_arr), jnp.asarray(valid),
+            l1_size, l1_size, cap + 1, "lp",
+        )
+        got: dict[int, np.float32] = {}
+        for key, v, ok in zip(np.asarray(l1.ids), np.asarray(l1.values),
+                              np.asarray(l1.ids) >= 0):
+            if ok:
+                got[int(key)] = v
+        l2_live = np.arange(l2.values.shape[0]) < int(l2.used)
+        for key, v, ok in zip(np.asarray(l2.ids), np.asarray(l2.values), l2_live):
+            if ok:
+                got[int(key)] = got.get(int(key), np.float32(0.0)) + v
+        for s in range(int(c_nnz_n[i])):
+            out[i, s] = got.get(int(c_idx_n[i, s]), np.float32(0.0))
+    return jnp.asarray(out)
+
+
 def grouped_matmul_ref(x, w, group_ids):
     """Per-token expert matmul: y[t] = x[t] @ w[group_ids[t]].
 

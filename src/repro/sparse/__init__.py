@@ -14,7 +14,11 @@ from repro.sparse.generators import (
     aggregation_prolongator,
     galerkin_triple,
 )
-from repro.sparse.oracle import dense_spgemm_oracle, gustavson_numpy
+from repro.sparse.oracle import (
+    dense_spgemm_oracle,
+    gustavson_ell_structure,
+    gustavson_numpy,
+)
 
 __all__ = [
     "CSR",
@@ -30,5 +34,6 @@ __all__ = [
     "aggregation_prolongator",
     "galerkin_triple",
     "dense_spgemm_oracle",
+    "gustavson_ell_structure",
     "gustavson_numpy",
 ]

@@ -47,3 +47,20 @@ def gustavson_numpy(a: CSR, b: CSR):
     indices = np.concatenate(all_cols) if all_cols else np.zeros(0, np.int32)
     values = np.concatenate(all_vals) if all_vals else np.zeros(0, a_values.dtype)
     return indptr, indices, values, row_flops
+
+
+def gustavson_ell_structure(a: CSR, b: CSR):
+    """Symbolic structure of C = A*B in ELL layout, from the numpy oracle.
+
+    Returns ``(c_idx, c_nnz)`` numpy arrays — ``c_idx`` (m, rC) per-row
+    sorted columns (padded slots 0), ``c_nnz`` (m,) live widths — the
+    numeric-phase kernels' structure inputs. Shared by the kernel tests and
+    the accumulator-crossover example.
+    """
+    ip, ind, _, _ = gustavson_numpy(a, b)
+    r_c = max(int(np.diff(ip).max()), 1)
+    c_idx = np.zeros((a.m, r_c), np.int32)
+    c_nnz = np.diff(ip).astype(np.int32)
+    for i in range(a.m):
+        c_idx[i, : c_nnz[i]] = ind[ip[i]: ip[i + 1]]
+    return c_idx, c_nnz

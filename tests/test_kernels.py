@@ -15,7 +15,12 @@ from repro.kernels.grouped_matmul import TM, grouped_matmul
 from repro.kernels.spgemm_numeric import spgemm_numeric
 from repro.kernels.spgemm_symbolic import spgemm_symbolic
 from repro.kernels.ops import pallas_spgemm
-from repro.sparse import gustavson_numpy, random_csr, stencil2d_csr
+from repro.sparse import (
+    gustavson_ell_structure,
+    gustavson_numpy,
+    random_csr,
+    stencil2d_csr,
+)
 from repro.sparse.formats import csr_to_ell
 
 RNG = np.random.default_rng(0)
@@ -49,12 +54,7 @@ def test_spgemm_numeric_sweep(m, n, k, dtype):
     a = random_csr(m, n, 3.0, m)
     b = random_csr(n, k, 4.0, n)
     ea, eb = csr_to_ell(a), csr_to_ell(b)
-    ip, ind, val, _ = gustavson_numpy(a, b)
-    r_c = max(int(np.diff(ip).max()), 1)
-    c_idx = np.zeros((m, r_c), np.int32)
-    c_nnz = np.diff(ip).astype(np.int32)
-    for i in range(m):
-        c_idx[i, : c_nnz[i]] = ind[ip[i]: ip[i + 1]]
+    c_idx, c_nnz = gustavson_ell_structure(a, b)
     got = spgemm_numeric(
         ea.indices, ea.values.astype(dtype), ea.row_nnz, eb.indices,
         eb.values.astype(dtype), jnp.asarray(c_idx), jnp.asarray(c_nnz),
@@ -99,11 +99,8 @@ def test_bucketed_kernel_wrappers_match_plain():
     np.testing.assert_array_equal(np.asarray(got), np.diff(ip))
 
     eb = csr_to_ell(b)
-    r_c = max(int(np.diff(ip).max()), 1)
-    c_idx = np.zeros((a.m, r_c), np.int32)
-    c_nnz = np.diff(ip).astype(np.int32)
-    for i in range(a.m):
-        c_idx[i, : c_nnz[i]] = ind[ip[i]: ip[i + 1]]
+    c_idx, c_nnz = gustavson_ell_structure(a, b)
+    r_c = c_idx.shape[1]
     got_v = spgemm_numeric_bucketed(
         ell.indices, ell.values, ell.row_nnz, eb.indices, eb.values,
         jnp.asarray(c_idx), jnp.asarray(c_nnz), k=b.k, interpret=True,

@@ -1,0 +1,364 @@
+"""KKLP Pallas kernel tests (interpret mode) + meta-dispatch routing.
+
+Acceptance contracts of the LP-hash accumulator kernel:
+  * spgemm_lp output is BITWISE the core/accumulators.py oracle
+    (accumulate_row(kind="lp") -> merged L1+L2 extraction), on randomized
+    CSR inputs, including L1 sizes small enough that rows spill to L2
+  * lp_reuse (plan replay through the LP accumulator) matches numeric_reuse
+  * kernels.ops.numeric_values routes flat_lp-regime inputs to the LP
+    kernel — NOT the dense-accumulator kernel — and f64/int dtypes to XLA
+  * spgemm(method="lp") and ReuseExecutor(backend="pallas_lp") are wired
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    PlanCache,
+    ReuseExecutor,
+    numeric_lp,
+    numeric_reuse,
+    spgemm,
+)
+from repro.core.accumulators import accumulate_row
+from repro.kernels import (
+    lp_reuse,
+    lp_reuse_arrays,
+    ref,
+    spgemm_lp,
+    spgemm_lp_bucketed,
+)
+from repro.kernels.ops import (
+    KERNEL_COUNTS,
+    numeric_values,
+    reset_kernel_counts,
+    resolve_numeric_kernel,
+)
+from repro.sparse import (
+    CSR,
+    dense_spgemm_oracle,
+    gustavson_ell_structure,
+    gustavson_numpy,
+    random_csr,
+)
+from repro.sparse.formats import csr_to_ell
+
+
+def _structure(a: CSR, b: CSR):
+    """Symbolic structure of C = A*B in ELL layout (numpy Gustavson)."""
+    c_idx, c_nnz = gustavson_ell_structure(a, b)
+    return jnp.asarray(c_idx), jnp.asarray(c_nnz)
+
+
+def _row_spills(a: CSR, b: CSR, l1_size: int) -> bool:
+    """True if any row's insert stream spills L1 at the 50% cutoff."""
+    a_n, b_n = np.asarray(a.indptr), np.asarray(b.indptr)
+    ai, bi = np.asarray(a.indices), np.asarray(b.indices)
+    for i in range(a.m):
+        keys = []
+        for s in range(a_n[i], a_n[i + 1]):
+            j = ai[s]
+            keys.extend(bi[b_n[j]: b_n[j + 1]].tolist())
+        if len(set(keys)) > l1_size // 2:
+            return True
+    return False
+
+
+@pytest.mark.parametrize("m,n,k,da,db,seed", [
+    (12, 16, 20, 3.0, 2.5, 1),
+    (24, 20, 16, 2.0, 3.0, 2),
+    (8, 32, 48, 4.0, 4.0, 3),
+])
+@pytest.mark.parametrize("l1_size", [4, 16, None])
+def test_spgemm_lp_bitwise_vs_accumulator_oracle(m, n, k, da, db, seed, l1_size):
+    """The kernel replays the exact insert stream of the jittable LP port:
+    output must be bitwise-equal, spill or no spill (l1_size=4 -> cutoff 2,
+    heavy spill; None -> the never-spilling default)."""
+    a = random_csr(m, n, da, seed)
+    b = random_csr(n, k, db, seed + 100)
+    ea, eb = csr_to_ell(a), csr_to_ell(b)
+    c_idx, c_nnz = _structure(a, b)
+    if l1_size == 4:  # construction precondition: the spill path must run
+        assert _row_spills(a, b, l1_size)
+    got = spgemm_lp(ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
+                    eb.row_nnz, c_idx, c_nnz, l1_size=l1_size, interpret=True)
+    from repro.kernels.spgemm_lp import default_l1_size
+
+    eff_l1 = default_l1_size(c_idx.shape[1]) if l1_size is None else l1_size
+    want = ref.spgemm_lp_ref(ea.indices, ea.values, ea.row_nnz, eb.indices,
+                             eb.values, eb.row_nnz, c_idx, c_nnz, eff_l1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_spgemm_lp_matches_gustavson():
+    """Independent of the accumulator oracle: values match the numpy
+    Gustavson sweep at the symbolic structure."""
+    a = random_csr(16, 20, 3.0, 11)
+    b = random_csr(20, 24, 2.5, 12)
+    ea, eb = csr_to_ell(a), csr_to_ell(b)
+    ip, ind, val, _ = gustavson_numpy(a, b)
+    c_idx, c_nnz = _structure(a, b)
+    got = np.asarray(
+        spgemm_lp(ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
+                  eb.row_nnz, c_idx, c_nnz, interpret=True)
+    )
+    for i in range(a.m):
+        n_i = int(c_nnz[i])
+        np.testing.assert_allclose(got[i, :n_i], val[ip[i]: ip[i + 1]],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_spgemm_lp_bucketed_matches_plain():
+    """Width bucketing (padded rA/rB/rC, masked by the nnz vectors) must not
+    change values; output sliced back to the caller's rC."""
+    a = random_csr(14, 18, 3.0, 5)
+    b = random_csr(18, 22, 2.5, 6)
+    ea, eb = csr_to_ell(a), csr_to_ell(b)
+    c_idx, c_nnz = _structure(a, b)
+    plain = spgemm_lp(ea.indices, ea.values, ea.row_nnz, eb.indices,
+                      eb.values, eb.row_nnz, c_idx, c_nnz, interpret=True)
+    bucketed = spgemm_lp_bucketed(ea.indices, ea.values, ea.row_nnz,
+                                  eb.indices, eb.values, eb.row_nnz,
+                                  c_idx, c_nnz, interpret=True)
+    assert bucketed.shape == plain.shape
+    np.testing.assert_array_equal(np.asarray(bucketed), np.asarray(plain))
+
+
+@pytest.mark.parametrize("seed,m,n,k,d", [
+    (1, 40, 50, 45, 3.0),
+    (2, 9, 7, 5, 1.5),
+    (3, 100, 100, 100, 5.0),  # fm_cap > LP_TILE: multi-tile grid path
+])
+def test_lp_reuse_matches_numeric_reuse(seed, m, n, k, d):
+    from repro.kernels.spgemm_lp import LP_TILE
+
+    a = random_csr(m, n, d, seed)
+    b = random_csr(n, k, d, seed + 100)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    if seed == 3:  # construction precondition: cross-tile RMW must exercise
+        assert res.plan.seg_ids.shape[0] > LP_TILE
+    want = numeric_reuse(res.plan, a.values, b.values)
+    got = lp_reuse(res.plan, a.values, b.values, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lp_reuse_matches_ref_oracle():
+    a = random_csr(21, 17, 2.0, 61)
+    b = random_csr(17, 19, 2.0, 62)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    p = res.plan
+    want = ref.segsum_reuse_ref(p.a_slot_s, p.b_slot_s, p.seg_ids,
+                                a.values, b.values, p.indices.shape[0])
+    got = lp_reuse_arrays(p.a_slot_s, p.b_slot_s, p.seg_ids,
+                          a.values, b.values,
+                          nnz_cap=p.indices.shape[0], interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _flat_lp_pair():
+    """A pair in the KKLP regime (avg row flops >= 256)."""
+    a = random_csr(4, 32, 16.0, 3)
+    b = random_csr(32, 64, 32.0, 4)
+    assert resolve_numeric_kernel(a, b) == "flat_lp"
+    return a, b
+
+
+def test_numeric_values_routes_flat_lp_to_lp_kernel():
+    """Acceptance: the flat_lp branch dispatches to the LP kernel, not the
+    dense accumulator — and the values still match the dense oracle."""
+    a, b = _flat_lp_pair()
+    c_idx, c_nnz = _structure(a, b)
+    reset_kernel_counts()
+    got = numeric_values(a, b, c_idx, c_nnz)
+    assert KERNEL_COUNTS["flat_lp"] == 1
+    assert KERNEL_COUNTS["dense_acc"] == 0
+    dense = np.zeros((a.m, b.k), np.float32)
+    got_n, ci, cn = np.asarray(got), np.asarray(c_idx), np.asarray(c_nnz)
+    for i in range(a.m):
+        dense[i, ci[i, : cn[i]]] = got_n[i, : cn[i]]
+    np.testing.assert_allclose(dense, dense_spgemm_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_numeric_values_routes_modest_rows_to_dense_acc():
+    a = random_csr(24, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    assert resolve_numeric_kernel(a, b) == "dense_acc"
+    c_idx, c_nnz = _structure(a, b)
+    reset_kernel_counts()
+    numeric_values(a, b, c_idx, c_nnz)
+    assert KERNEL_COUNTS["dense_acc"] == 1
+    assert KERNEL_COUNTS["flat_lp"] == 0
+
+
+def test_numeric_values_int_dtype_falls_back_to_xla():
+    """f32-accumulating Pallas kernels must not see int operands: "auto"
+    resolves to the exact XLA reference even in the flat_lp regime."""
+    a, b = _flat_lp_pair()
+    ai = CSR(a.indptr, a.indices,
+             jnp.ones(a.nnz_cap, jnp.int32), a.shape)
+    bi = CSR(b.indptr, b.indices,
+             jnp.ones(b.nnz_cap, jnp.int32), b.shape)
+    assert resolve_numeric_kernel(ai, bi) == "xla"
+    c_idx, c_nnz = _structure(ai, bi)
+    reset_kernel_counts()
+    out = numeric_values(ai, bi, c_idx, c_nnz)
+    assert KERNEL_COUNTS["xla"] == 1
+    assert jnp.issubdtype(out.dtype, jnp.integer)
+    with pytest.raises(ValueError, match="unknown kernel"):
+        numeric_values(a, b, c_idx, c_nnz, kernel="cuda")
+    # an EXPLICIT Pallas kernel on f32-incompatible dtypes fails loudly
+    # instead of silently truncating integer sums in the f32 accumulator
+    for explicit in ("flat_lp", "dense_acc"):
+        with pytest.raises(ValueError, match="accumulates in f32"):
+            numeric_values(ai, bi, c_idx, c_nnz, kernel=explicit)
+
+
+def test_spgemm_method_lp():
+    """spgemm(method='lp'): same plan/cache pipeline, LP-kernel values."""
+    a = random_csr(24, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    res = spgemm(a, b, method="lp", plan_cache=PlanCache())
+    assert res.stats["method"] == "lp"
+    assert res.stats["lp_backend"] == "pallas"
+    assert res.plan is not None  # the Reuse path survives
+    np.testing.assert_allclose(np.asarray(res.c.to_dense()),
+                               dense_spgemm_oracle(a, b), rtol=1e-4, atol=1e-4)
+    # int operands: automatic XLA fallback, exact integer accumulation
+    ai = CSR(a.indptr, a.indices, jnp.ones(a.nnz_cap, jnp.int32), a.shape)
+    bi = CSR(b.indptr, b.indices, jnp.ones(b.nnz_cap, jnp.int32), b.shape)
+    res_i = spgemm(ai, bi, method="lp", plan_cache=PlanCache())
+    assert res_i.stats["lp_backend"] == "xla"
+    assert jnp.issubdtype(res_i.c.values.dtype, jnp.integer)
+
+
+def test_spgemm_stats_record_kernel_choice():
+    a = random_csr(24, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    assert res.stats["kernel"] == "dense_acc"
+    af, bf = _flat_lp_pair()
+    res_f = spgemm(af, bf, method="sparse", plan_cache=PlanCache())
+    assert res_f.stats["kernel"] == "flat_lp"
+
+
+def test_numeric_lp_composite_matches_fresh():
+    """numeric_lp (expand -> plan -> LP replay, one jitted composite) agrees
+    with the XLA numeric_fresh pipeline on both structure and values."""
+    from repro.core import numeric_fresh, round_capacity
+    from repro.core.compression import flops_stats
+
+    a = random_csr(20, 24, 2.5, 31)
+    b = random_csr(24, 18, 2.0, 32)
+    fm = int(flops_stats(a, b.row_nnz())[0])
+    fm_cap = round_capacity(fm)
+    c_ref, _ = numeric_fresh(a, b, fm_cap, round_capacity(64))
+    nnz_cap = round_capacity(int(c_ref.indptr[-1]))
+    c_ref, _ = numeric_fresh(a, b, fm_cap, nnz_cap)
+    c_lp, plan = numeric_lp(a, b, fm_cap, nnz_cap, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c_lp.indptr),
+                                  np.asarray(c_ref.indptr))
+    np.testing.assert_allclose(np.asarray(c_lp.values),
+                               np.asarray(c_ref.values), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Meta-algorithm correctness fixes (hypothesis-free home: this module is
+# always collected, unlike test_spgemm.py / test_accumulators.py which are
+# skipped without hypothesis — these guards must run everywhere)
+# --------------------------------------------------------------------------
+
+
+def test_choose_method_memory_guard_scales_with_dtype():
+    """Regression: the dense-bytes guard must use the value itemsize. With
+    m*k chosen so f32 values (4+4 bytes/slot) exactly fit the 1 GiB budget,
+    f64 values (8+4 bytes/slot) must overflow it and force 'sparse' — the
+    old hard-coded 4-byte guard said 'dense' for both. Values are numpy
+    arrays so the f64 dtype survives without the x64 flag (choose_method
+    only inspects dtypes; nothing is compiled here)."""
+    from repro.core import choose_method
+
+    m, k = 4096, 32768  # m*k*8 == 1 GiB == DENSE_BYTES_BUDGET
+    base = random_csr(8, 8, 2.0, 3)
+    a32 = CSR(base.indptr, base.indices,
+              np.zeros(base.nnz_cap, np.float32), (m, 8))
+    b32 = CSR(base.indptr, base.indices,
+              np.zeros(base.nnz_cap, np.float32), (8, k))
+    assert choose_method(a32, b32, {}) == "dense"
+    a64 = CSR(a32.indptr, a32.indices,
+              np.zeros(base.nnz_cap, np.float64), (m, 8))
+    b64 = CSR(b32.indptr, b32.indices,
+              np.zeros(base.nnz_cap, np.float64), (8, k))
+    assert choose_method(a64, b64, {}) == "sparse"
+    # mixed promotes: f32 * f64 accumulates in f64 -> still 'sparse'
+    assert choose_method(a64, b32, {}) == "sparse"
+
+
+def test_choose_kernel_requires_fm():
+    """Regression: a missing stats['fm'] must fail loudly, not silently
+    select 'dense_acc' via a 0 default."""
+    from repro.core import choose_kernel
+
+    a = random_csr(10, 10, 2.0, 2)
+    b = random_csr(10, 10, 2.0, 3)
+    with pytest.raises(KeyError, match="fm"):
+        choose_kernel(a, b, {})
+    assert choose_kernel(a, b, {"fm": 1}) == "dense_acc"
+    assert choose_kernel(a, b, {"fm": 256 * a.m}) == "flat_lp"
+
+
+def test_spgemm_rejects_unknown_method():
+    a = random_csr(10, 10, 2.0, 2)
+    b = random_csr(10, 10, 2.0, 3)
+    with pytest.raises(ValueError, match="unknown method"):
+        spgemm(a, b, method="hash")
+
+
+def test_lp_insert_validates_max_occupancy():
+    from repro.core.accumulators import lp_init, lp_insert
+
+    st8 = lp_init(8)
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="max_occupancy"):
+            lp_insert(st8, jnp.int32(1), jnp.float32(1.0), max_occupancy=bad)
+
+
+def test_lp_insert_full_table_terminates_at_clamped_cutoff():
+    """max_occupancy=1.0 used to allow the table to fill with distinct keys,
+    leaving the probe loop no -1 sentinel to stop at (infinite spin). The
+    clamped cutoff (size - 1) must reject the key that would fill the table
+    — and the probe must still terminate for both old and new keys after."""
+    from repro.core.accumulators import lp_init, lp_insert
+
+    size = 4
+    st4 = lp_init(size)
+    accepted = []
+    for key in range(size + 2):  # 6 distinct keys into a 4-slot table
+        st4, ok = lp_insert(st4, jnp.int32(key), jnp.float32(1.0),
+                            max_occupancy=1.0)
+        accepted.append(bool(ok))
+    assert accepted == [True, True, True, False, False, False]
+    assert int(st4.used) == size - 1  # one sentinel always survives
+    # existing keys still accumulate at full clamped occupancy
+    st4, ok = lp_insert(st4, jnp.int32(0), jnp.float32(2.0),
+                        max_occupancy=1.0)
+    assert bool(ok) and float(st4.values[0]) == 3.0
+
+
+def test_executor_pallas_lp_backend():
+    a = random_csr(25, 25, 3.0, 71)
+    b = random_csr(25, 25, 3.0, 72)
+    ex_xla = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache(),
+                                         backend="xla")
+    ex_lp = ReuseExecutor(ex_xla.plan, backend="pallas_lp", interpret=True)
+    got = ex_lp.apply(a.values, b.values)
+    want = ex_xla.apply(a.values, b.values)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # int values route back to XLA inside the same backend: exact result
+    av = jnp.ones(a.nnz_cap, jnp.int32)
+    bv = jnp.ones(b.nnz_cap, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(ex_lp.apply(av, bv)),
+                                  np.asarray(ex_xla.apply(av, bv)))

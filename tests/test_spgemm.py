@@ -142,6 +142,12 @@ def test_meta_algorithm_cutoffs():
     assert choose_method(a, big_b, {}) == "sparse"
 
 
+# NOTE: the meta-algorithm regression tests (choose_method memory guard,
+# choose_kernel KeyError, unknown-method validation, lp_insert clamp) live in
+# tests/test_lp_kernel.py — this module is collection-skipped when hypothesis
+# is absent (conftest.py), and those guards must run everywhere.
+
+
 def test_triple_product_galerkin():
     """R*A*P multigrid product (24 of the paper's 83 cases are R*A*P)."""
     r, a, p = galerkin_triple(8, 8, 4)
