@@ -25,6 +25,11 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        count on a pinned ShardedReuseExecutor (flat curve =
                        zero per-replay host work); mesh shape in the row
   bench_train_smoke  — LM substrate: tokens/s of a smoke train step
+  bench_autotune     — autotuner regret table: static vs fitted vs measured
+                       kernel picks over the accumulator sweep (regret in us
+                       vs the static rule; the acceptance artifact for
+                       core/autotune), plus a live tune="measure" first-
+                       sight + cached-winner replay demo with telemetry
 
 ``--quick`` runs a CI-sized smoke subset (2 suite cases; compile, reuse,
 batched-reuse and dist benches only). ``--devices N`` forces an N-device
@@ -32,7 +37,17 @@ host platform (must be set before jax initializes — the flag is injected at
 the top of main()) so the shard_map paths run mesh-wide on CPU-only
 runners. ``--json PATH`` additionally writes the rows as machine-readable
 JSON (exact derived metric values; the CSV column is a rendering of them)
-so CI can archive a BENCH_*.json trajectory.
+so CI can archive a BENCH_*.json trajectory. Every row (and the payload)
+is stamped with backend/platform/jax_version so fitted thresholds are
+keyed per backend, and all bench RNG seeds are fixed constants
+(``BENCH_SEED`` plus per-generator literals) so artifacts are comparable
+across PRs.
+
+``--fit-thresholds BENCH_JSON`` is a subcommand, not a bench: it loads a
+previously archived benchmark payload (any run containing
+``accumulators/*`` rows), fits per-backend thresholds with
+``repro.core.autotune.fit_thresholds``, writes the ``TunedThresholds``
+table to --json (the ``BENCH_autotune_<sha>.json`` CI artifact) and exits.
 """
 from __future__ import annotations
 
@@ -65,9 +80,26 @@ ROWS: list[str] = []
 RESULTS: list[dict] = []  # structured mirror of ROWS for --json
 CASES: list = []  # populated by main(); benches iterate this, not suite()
 
+# One seed for every ad-hoc bench RNG (values-only resamples etc.); matrix
+# generators carry their own per-case literals. Fixed so BENCH_*.json
+# artifacts are comparable across PRs.
+BENCH_SEED = 0
+
 
 def _fmt_val(v) -> str:
     return f"{v:.6g}" if isinstance(v, float) else str(v)
+
+
+def _env_stamp() -> dict:
+    """backend/platform/jax-version stamp attached to every result row, so
+    downstream consumers (``autotune.fit_thresholds``) can key per-backend
+    fits without trusting payload-level context."""
+    dev = jax.devices()[0]
+    return {
+        "backend": jax.default_backend(),
+        "platform": getattr(dev, "device_kind", "unknown"),
+        "jax_version": jax.__version__,
+    }
 
 
 def emit(name: str, us: float, derived: dict | None = None):
@@ -78,7 +110,8 @@ def emit(name: str, us: float, derived: dict | None = None):
     text = ";".join(f"{k}={_fmt_val(v)}" for k, v in derived.items())
     row = f"{name},{us:.1f},{text}"
     ROWS.append(row)
-    RESULTS.append({"name": name, "us_per_call": us, "derived": derived})
+    RESULTS.append({"name": name, "us_per_call": us, "derived": derived,
+                    **_env_stamp()})
     print(row, flush=True)
 
 
@@ -190,7 +223,7 @@ def bench_reuse_batched(batches=(8, 32)):
     cases = [("rand256_AxA", small, small)] + list(CASES[:2])
     for name, a, b in cases:
         ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(BENCH_SEED)
         for batch in batches:
             a_stack = jnp.asarray(
                 rng.standard_normal((batch, a.nnz_cap)), jnp.float32)
@@ -241,7 +274,7 @@ def bench_compile():
     us2, res2 = one_call(a2, b2)
     traces_same_bucket = sum(TRACE_COUNTS.values()) - traces_first
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(BENCH_SEED)
     a1v = CSR(a1.indptr, a1.indices,
               jnp.asarray(rng.standard_normal(a1.nnz_cap), jnp.float32), a1.shape)
     us3, res3 = one_call(a1v, b1)
@@ -259,6 +292,38 @@ def bench_compile():
     emit("compile/cache", 0.0,
          {"hits": cs["hits"], "misses": cs["misses"],
           "hit_rate": cs["hit_rate"]})
+
+
+def _accum_regimes(quick: bool) -> list[tuple]:
+    """The avg-row-flop regimes straddling the KKLP cutoff — shared by
+    bench_accumulators (the crossover artifact) and bench_autotune (the
+    regret table), so the fit is evaluated on exactly the sweep it is
+    fitted from."""
+    regimes = [
+        ("low_flops", random_csr(128, 128, 3.0, 41), random_csr(128, 128, 3.0, 42)),
+        ("high_flops", random_csr(8, 32, 12.0, 45), random_csr(32, 96, 32.0, 46)),
+    ]
+    if not quick:
+        regimes.insert(1, (
+            "mid_flops", random_csr(64, 96, 8.0, 43), random_csr(96, 128, 8.0, 44)))
+    return regimes
+
+
+def _time_accum_arms(a, b, stats: dict, interpret: bool) -> dict[str, float]:
+    """Time the three accumulator arms (full from-scratch numeric phase) on
+    one problem: {"dense_acc": us, "segsum": us, "lp_hash": us}."""
+    from repro.core import numeric_fresh, numeric_lp
+    from repro.core.spgemm import numeric_dense_acc
+
+    fm_cap, nnz_cap = stats["fm_cap"], stats["nnz_cap"]
+    per: dict[str, float] = {}
+    per["dense_acc"], _ = timeit(
+        lambda: numeric_dense_acc(a, b, fm_cap, nnz_cap))
+    per["segsum"], _ = timeit(
+        lambda: numeric_fresh(a, b, fm_cap, nnz_cap)[0])
+    per["lp_hash"], _ = timeit(
+        lambda: numeric_lp(a, b, fm_cap, nnz_cap, interpret=interpret)[0])
+    return per
 
 
 def bench_accumulators(quick: bool = False):
@@ -285,32 +350,17 @@ def bench_accumulators(quick: bool = False):
     the artifact should track the dense/segsum columns plus the
     choose_kernel pick until real-TPU CI exists.
     """
-    from repro.core import choose_kernel, numeric_fresh, numeric_lp
-    from repro.core.spgemm import numeric_dense_acc
+    from repro.core import choose_kernel
 
     interpret = jax.default_backend() != "tpu"
     arm_backend = {"dense_acc": "xla", "segsum": "xla",
                    "lp_hash": "interpret" if interpret else "pallas"}
-    regimes = [
-        ("low_flops", random_csr(128, 128, 3.0, 41), random_csr(128, 128, 3.0, 42)),
-        ("high_flops", random_csr(8, 32, 12.0, 45), random_csr(32, 96, 32.0, 46)),
-    ]
-    if not quick:
-        regimes.insert(1, (
-            "mid_flops", random_csr(64, 96, 8.0, 43), random_csr(96, 128, 8.0, 44)))
-    for name, a, b in regimes:
+    for name, a, b in _accum_regimes(quick):
         res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
         fm = res.stats["fm"]
         avg_row_flops = fm / max(a.m, 1)
         chosen = choose_kernel(a, b, {"fm": fm})
-        fm_cap, nnz_cap = res.stats["fm_cap"], res.stats["nnz_cap"]
-        per: dict[str, float] = {}
-        per["dense_acc"], _ = timeit(
-            lambda: numeric_dense_acc(a, b, fm_cap, nnz_cap))
-        per["segsum"], _ = timeit(
-            lambda: numeric_fresh(a, b, fm_cap, nnz_cap)[0])
-        per["lp_hash"], _ = timeit(
-            lambda: numeric_lp(a, b, fm_cap, nnz_cap, interpret=interpret)[0])
+        per = _time_accum_arms(a, b, res.stats, interpret)
         for acc, us in per.items():
             emit(f"accumulators/{name}/{acc}", us,
                  {"avg_row_flops": avg_row_flops, "fm": fm,
@@ -322,6 +372,102 @@ def bench_accumulators(quick: bool = False):
               "winner": winner, "comparable": int(not interpret),
               "lp_over_segsum": per["lp_hash"] / per["segsum"],
               "dense_over_segsum": per["dense_acc"] / per["segsum"]})
+
+
+def bench_autotune(quick: bool = False):
+    """Autotuner acceptance: regret of each selection mode vs the static rule.
+
+    Reruns the accumulator sweep, then asks each mode which arm it would
+    pick per regime and charges it that arm's measured time:
+
+      static   — the paper rule at AVG_ROW_FLOPS_CUTOFF (the baseline;
+                 regret 0 by definition)
+      fitted   — thresholds fitted (in-run) from this very sweep via
+                 ``fit_thresholds``; by construction its TOTAL time over the
+                 sweep is <= static's (the fit minimizes exactly that), so
+                 ``autotune/regret_total`` must be <= 0 up to timing noise
+      measured — the per-regime argmin, what ``tune="measure"`` converges
+                 to; pointwise regret <= 0 by definition
+
+    A live ``spgemm(tune="measure")`` demo rides along: first sight pays one
+    micro-bench (TUNE_COUNTS delta proves it), the pinned-plan replay
+    re-dispatches the cached winner with zero re-tuning (plan_meta_hit, no
+    new micro_bench).
+    """
+    from repro.core import (
+        AVG_ROW_FLOPS_CUTOFF,
+        fit_thresholds,
+        set_tuned_thresholds,
+    )
+    from repro.core.autotune import ARM_OF_PICK, TUNE_COUNTS
+
+    interpret = jax.default_backend() != "tpu"
+    stamp = _env_stamp()
+    sweep = []  # (regime, avg_row_flops, per-arm times)
+    for name, a, b in _accum_regimes(quick):
+        res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+        fm = res.stats["fm"]
+        per = _time_accum_arms(a, b, res.stats, interpret)
+        sweep.append((name, fm / max(a.m, 1), per))
+
+    # feed the fitter the same row shape bench_accumulators archives
+    fit_rows = [
+        {"name": f"accumulators/{name}/{arm}", "us_per_call": us,
+         "backend": stamp["backend"], "platform": stamp["platform"],
+         "derived": {"avg_row_flops": arf}}
+        for name, arf, per in sweep for arm, us in per.items()
+    ]
+    table = fit_thresholds({"rows": fit_rows, **stamp})
+    fit = table.for_backend()
+    cutoff = fit.avg_row_flops_cutoff if fit else None
+    emit("autotune/fit", 0.0,
+         {"fitted_cutoff": -1.0 if cutoff is None else float(cutoff),
+          "static_cutoff": float(AVG_ROW_FLOPS_CUTOFF),
+          "n_points": fit.n_points if fit else 0})
+
+    totals = {"static": 0.0, "fitted": 0.0, "measured": 0.0}
+    for name, arf, per in sweep:
+        choosable = {k: per[v] for k, v in ARM_OF_PICK.items()}
+        static_pick = ("dense_acc" if arf < AVG_ROW_FLOPS_CUTOFF
+                       else "flat_lp")
+        fitted_pick = (static_pick if cutoff is None
+                       else "dense_acc" if arf < cutoff else "flat_lp")
+        t_static = choosable[static_pick]
+        t_fitted = choosable[fitted_pick]
+        t_measured = min(choosable.values())
+        totals["static"] += t_static
+        totals["fitted"] += t_fitted
+        totals["measured"] += t_measured
+        emit(f"autotune/{name}/regret", 0.0,
+             {"avg_row_flops": arf, "static_pick": static_pick,
+              "fitted_pick": fitted_pick,
+              "measured_pick": min(choosable, key=choosable.get),
+              "static_us": t_static,
+              "regret_fitted_us": t_fitted - t_static,
+              "regret_measured_us": t_measured - t_static})
+    emit("autotune/regret_total", 0.0,
+         {"static_us": totals["static"],
+          "regret_fitted_us": totals["fitted"] - totals["static"],
+          "regret_measured_us": totals["measured"] - totals["static"]})
+
+    # live measure-mode demo on a pinned plan cache
+    cache = PlanCache()
+    a = random_csr(96, 96, 4.0, 47)
+    b = random_csr(96, 96, 4.0, 48)
+    mb0, pm0 = TUNE_COUNTS["micro_bench"], TUNE_COUNTS["plan_meta_hit"]
+    us_first, _ = timeit(
+        lambda: spgemm(a, b, method="sparse", plan_cache=cache,
+                       tune="measure").c.values, reps=1)
+    mb_first = TUNE_COUNTS["micro_bench"] - mb0
+    us_replay, _ = timeit(
+        lambda: spgemm(a, b, method="sparse", plan_cache=cache,
+                       tune="measure").c.values)
+    emit("autotune/measure_demo", us_replay,
+         {"first_call_us": us_first,
+          "micro_bench_first": mb_first,
+          "micro_bench_new_on_replay":
+              TUNE_COUNTS["micro_bench"] - mb0 - mb_first,
+          "plan_meta_hits": TUNE_COUNTS["plan_meta_hit"] - pm0})
 
 
 def bench_fm_groups(results):
@@ -384,7 +530,7 @@ def bench_dist(n_windows=5, window=16):
     for placement in ("replicated", "allgather"):
         ex = ShardedReuseExecutor.from_matrices(
             a, b, mesh, b_placement=placement, plan_cache=PlanCache())
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(BENCH_SEED)
         av = jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32)
         bv = jnp.asarray(rng.standard_normal(b.nnz_cap), jnp.float32)
         for _ in range(3):  # warm the dispatch path
@@ -450,6 +596,7 @@ BENCHES = {
     "reuse": lambda quick: bench_reuse(),
     "reuse_batched": lambda quick: bench_reuse_batched(),
     "accumulators": bench_accumulators,
+    "autotune": bench_autotune,
     "dist": lambda quick: bench_dist(),
     "distributed": lambda quick: bench_distributed(),
     "train_smoke": lambda quick: bench_train_smoke(),
@@ -475,11 +622,36 @@ def main(argv: list[str] | None = None) -> None:
         help="also write results as machine-readable JSON to PATH",
     )
     parser.add_argument(
+        "--fit-thresholds", metavar="BENCH_JSON", default=None,
+        help="subcommand: fit per-backend autotuner thresholds from a "
+             "previously archived benchmark payload (needs accumulators/* "
+             "rows), write the TunedThresholds table to --json, and exit "
+             "without running any benches",
+    )
+    parser.add_argument(
         "--devices", type=int, default=0, metavar="N",
         help="force an N-device host platform (CPU shard_map benches); "
              "0 keeps the platform's real device count",
     )
     args = parser.parse_args(argv)
+    if args.fit_thresholds:
+        from repro.core import fit_thresholds
+
+        if not args.json:
+            parser.error("--fit-thresholds requires --json OUT (the path "
+                         "the fitted TunedThresholds table is written to)")
+        with open(args.fit_thresholds) as f:
+            payload = json.load(f)
+        table = fit_thresholds(payload, source=args.fit_thresholds)
+        table.save(args.json)
+        for bkey, fit in sorted(table.fits.items()):
+            print(f"fit,{bkey},avg_row_flops_cutoff="
+                  f"{fit.avg_row_flops_cutoff:.6g},n_points={fit.n_points}")
+        if not table.fits:
+            print("# no accumulators/* rows with dense_acc+lp_hash arms in "
+                  f"{args.fit_thresholds}; wrote an empty table")
+        print(f"# wrote {args.json} ({len(table.fits)} backend fits)")
+        return
     if args.devices > 1:
         # must land before jax touches its backend (lazy: nothing above
         # builds arrays) — same mechanism the distributed tests use
@@ -512,11 +684,13 @@ def main(argv: list[str] | None = None) -> None:
         bench_train_smoke()
     print(f"# {len(ROWS)} rows")
     if args.json:
+        stamp = _env_stamp()
         payload = {
             "schema": 1,
             "quick": bool(args.quick),
-            "jax_version": jax.__version__,
-            "backend": jax.default_backend(),
+            "jax_version": stamp["jax_version"],
+            "backend": stamp["backend"],
+            "platform": stamp["platform"],
             "device_count": jax.device_count(),
             "rows": RESULTS,
         }

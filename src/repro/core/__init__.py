@@ -13,6 +13,9 @@ Public API:
     round_capacity    — capacity bucketing policy ("exact8" / "pow2")
     PlanCache         — structure-keyed LRU of reuse plans (auto Reuse case;
                         entry-count + bytes bounds)
+    fit_thresholds    — per-backend crossover fit from bench_accumulators
+                        rows (static < fitted < measured; see core.autotune)
+    TunedThresholds   — the fitted table; activate with set_tuned_thresholds
 """
 from repro.core.spgemm import (
     SortedExpansion,
@@ -51,6 +54,16 @@ from repro.core.meta import (
     choose_method,
     estimate_ars,
     round_capacity,
+)
+from repro.core.autotune import (
+    TUNE_COUNTS,
+    BackendFit,
+    TunedThresholds,
+    fit_thresholds,
+    get_tuned_thresholds,
+    load_thresholds,
+    reset_tune_counts,
+    set_tuned_thresholds,
 )
 from repro.core.plan_cache import (
     HASH_COUNTS,
@@ -115,6 +128,14 @@ __all__ = [
     "choose_method",
     "estimate_ars",
     "round_capacity",
+    "TUNE_COUNTS",
+    "BackendFit",
+    "TunedThresholds",
+    "fit_thresholds",
+    "get_tuned_thresholds",
+    "load_thresholds",
+    "reset_tune_counts",
+    "set_tuned_thresholds",
     "PlanCache",
     "HASH_COUNTS",
     "default_plan_cache",

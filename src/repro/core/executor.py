@@ -109,6 +109,24 @@ _apply_donated = {
 }
 
 
+def replay_candidates(plan, a_values, b_values, interpret: bool) -> dict:
+    """The eligible replay backends for these operands, as autotuner thunks.
+
+    This *is* the PR 5 selection table in measurable form: XLA is always
+    eligible; the f32-accumulating Pallas kernels (segsum + LP-hash) join
+    only when ``f32_accumulation_ok`` admits the operand dtypes — measure
+    mode must never time (let alone pick) a kernel the dtype guard would
+    refuse to dispatch.
+    """
+    cands = {"xla": lambda: _apply(plan, a_values, b_values,
+                                   backend="xla", interpret=interpret)}
+    if f32_accumulation_ok(a_values.dtype, b_values.dtype):
+        for name in ("pallas", "pallas_lp"):
+            cands[name] = (lambda nm=name: _apply(
+                plan, a_values, b_values, backend=nm, interpret=interpret))
+    return cands
+
+
 @partial(jax.jit, static_argnames=("a_axis", "b_axis"))
 def _apply_batched(plan, a_values, b_values, a_axis, b_axis):
     _note_trace("executor_apply_batched")
@@ -123,18 +141,41 @@ class ReuseExecutor:
     Construction is the only host-side work: from then on every ``apply`` /
     ``apply_batched`` is a pure jitted dispatch — zero structure hashing,
     zero cache probes, zero retraces (for fixed operand shapes/dtypes).
+
+    ``tune="measure"`` defers the backend choice to first ``apply``: the
+    autotuner's bucket table is consulted (a previous executor on a
+    same-bucket problem already paid the sweep), else the eligible replay
+    backends are micro-benchmarked once on the first real operands; every
+    later ``apply`` re-dispatches the pinned winner with zero re-tuning.
+    ``kernel_source`` records the provenance ("static" until the first
+    measured apply, then "measured"). Requires ``backend="auto"`` — an
+    explicit backend pin and measure mode are contradictory instructions.
+    ``apply_batched`` stays on the XLA vmap formulation regardless: one
+    fused dispatch is the point of batching, and the Pallas kernels have no
+    batched formulation (module docstring).
     """
 
     def __init__(self, plan: SpgemmPlan, *, backend: str = "auto",
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, tune: str | None = None):
+        from repro.core import autotune  # lazy: keep ctor import-light
+
         if plan is None:
             raise ValueError(
                 "ReuseExecutor needs a SpgemmPlan; got None — the dense "
                 "spgemm method returns plan=None (no Reuse path), build the "
                 "plan with method='sparse'"
             )
+        autotune.validate_tune(tune)
+        if tune == "measure" and backend != "auto":
+            raise ValueError(
+                f"tune='measure' requires backend='auto' (got "
+                f"backend={backend!r}): measure mode picks the backend "
+                f"empirically, an explicit pin contradicts it")
         self.plan = plan
         self.backend = _resolve_backend(backend)
+        self.tune = tune
+        self.kernel_source = "static"
+        self._needs_measure = tune == "measure"
         # Pallas only lowers on TPU; everywhere else run it interpreted.
         self.interpret = (
             jax.default_backend() != "tpu" if interpret is None else interpret
@@ -143,12 +184,35 @@ class ReuseExecutor:
     @classmethod
     def from_matrices(cls, a: CSR, b: CSR, *, pad_policy: str | None = None,
                       plan_cache=None, backend: str = "auto",
-                      interpret: bool | None = None) -> "ReuseExecutor":
+                      interpret: bool | None = None,
+                      tune: str | None = None) -> "ReuseExecutor":
         """Build (or fetch from the plan cache) the plan for ``a @ b`` and pin
         it. This is the one and only structure hash in the executor's life."""
         res = spgemm(a, b, method="sparse", pad_policy=pad_policy,
                      plan_cache=plan_cache)
-        return cls(res.plan, backend=backend, interpret=interpret)
+        return cls(res.plan, backend=backend, interpret=interpret, tune=tune)
+
+    def _measure(self, a_values: jax.Array, b_values: jax.Array) -> None:
+        """First-apply backend measurement (tune="measure" only).
+
+        Bucket table first — a hit reuses another executor's sweep; else
+        micro-bench the eligible backends on these operands and record the
+        winner for the bucket. Either way the winner is pinned: later
+        applies are plain dispatches.
+        """
+        from repro.core import autotune
+
+        m, k = (int(x) for x in self.plan.shape)
+        bkey = autotune.bucket_key(m, k, self.fm_cap, a_values.dtype,
+                                   b_values.dtype, table="replay")
+        winner = autotune.lookup_measured(bkey)
+        if winner is None:
+            winner, _ = autotune.measure_and_record(
+                bkey, replay_candidates(self.plan, a_values, b_values,
+                                        self.interpret))
+        self.backend = winner
+        self.kernel_source = "measured"
+        self._needs_measure = False
 
     @property
     def shape(self) -> tuple:
@@ -176,6 +240,9 @@ class ReuseExecutor:
         buckets match.
         """
         DISPATCH_COUNTS["apply"] += 1
+        if self._needs_measure:
+            # measurement never donates: the sweep replays the same buffers
+            self._measure(a_values, b_values)
         if donate:
             key = {True: (True, True), "both": (True, True),
                    "a": (True, False), "b": (False, True)}.get(donate)
@@ -214,8 +281,8 @@ class ReuseExecutor:
 
 def spgemm_grouped(pairs: Sequence[tuple[CSR, CSR]], *,
                    pad_policy: str | None = None, plan_cache=None,
-                   backend: str = "auto",
-                   interpret: bool | None = None) -> list[CSR]:
+                   backend: str = "auto", interpret: bool | None = None,
+                   tune: str | None = None) -> list[CSR]:
     """Mixed-structure batch: group by structure, one dispatch per group.
 
     Each (A, B) multiply is hashed once with ``plan_cache.structure_key``;
@@ -224,7 +291,22 @@ def spgemm_grouped(pairs: Sequence[tuple[CSR, CSR]], *,
     ``apply_batched`` dispatch (plans come from — and land in — the plan
     cache, so repeated batches skip expansion entirely). Results come back
     in input order as CSR matrices sharing their group's structure arrays.
+
+    tune="measure": singleton groups dispatch the measured replay winner —
+    the plan-cache entry's recorded winner when one exists (zero re-tuning
+    across calls), else a first-sight measurement whose winner is written
+    back to the entry, exactly mirroring ``spgemm(tune="measure")``.
+    Batched (>1) groups keep the XLA vmap formulation — one fused dispatch
+    is the point of batching (see ReuseExecutor). Requires backend="auto".
     """
+    from repro.core import autotune  # lazy, mirrors ReuseExecutor
+
+    autotune.validate_tune(tune)
+    if tune == "measure" and backend != "auto":
+        raise ValueError(
+            f"tune='measure' requires backend='auto' (got "
+            f"backend={backend!r}): measure mode picks the backend "
+            f"empirically, an explicit pin contradicts it")
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
     if plan_cache is None:
         cache = default_plan_cache()
@@ -245,12 +327,26 @@ def spgemm_grouped(pairs: Sequence[tuple[CSR, CSR]], *,
         prepared.append((a, b, fm_cap))
 
     results: list[CSR | None] = [None] * len(prepared)
-    for (skey, _, _), idxs in groups.items():
+    for (skey, adt, bdt), idxs in groups.items():
         a0, b0, fm_cap = prepared[idxs[0]]
-        plan, _ = resolve_plan(a0, b0, fm_cap, policy, cache, key=skey)
-        ex = ReuseExecutor(plan, backend=backend, interpret=interpret)
+        plan, _, _ = resolve_plan(a0, b0, fm_cap, policy, cache, key=skey)
+        group_tune = tune if len(idxs) == 1 else None  # batched stays XLA
+        meta_key = ("tuned_backend", adt, bdt)
+        if group_tune == "measure" and cache is not None:
+            pinned = cache.get_meta(skey, meta_key)
+            if pinned is not None:
+                # a prior measured call already decided for this entry:
+                # dispatch the winner directly, zero re-tuning
+                autotune.TUNE_COUNTS["plan_meta_hit"] += 1
+                ex = ReuseExecutor(plan, backend=pinned, interpret=interpret)
+                results[idxs[0]] = ex.to_csr(ex.apply(a0.values, b0.values))
+                continue
+        ex = ReuseExecutor(plan, backend=backend, interpret=interpret,
+                           tune=group_tune)
         if len(idxs) == 1:
             results[idxs[0]] = ex.to_csr(ex.apply(a0.values, b0.values))
+            if ex.kernel_source == "measured" and cache is not None:
+                cache.set_meta(skey, meta_key, ex.backend)
             continue
         a_stack = jnp.stack([prepared[i][0].values for i in idxs])
         b_stack = jnp.stack([prepared[i][1].values for i in idxs])

@@ -10,6 +10,29 @@ TPU mapping (DESIGN.md §2): "dense" = dense-accumulator paths (XLA scatter /
 Pallas dense-tile kernel), "sparse" = sorted-segment flat-parallel path,
 "hash" = Pallas LP-hash kernel. The k cutoff doubles as a memory guard for
 the O(m*k) dense accumulator.
+
+Threshold precedence (static < fitted < measured; see ``core/autotune.py``):
+
+  static   — the paper constants above. The default, and the documented
+             fallback whenever nothing better is available.
+  fitted   — when a ``TunedThresholds`` table is active
+             (``autotune.set_tuned_thresholds``) and has a row for the
+             current backend, ``choose_kernel``/``choose_method`` use its
+             per-backend cutoffs instead of the constants. Backends without
+             a fitted row stay on static.
+  measured — ``tune="measure"`` callers bypass the threshold rule entirely:
+             candidates are micro-benchmarked on the real operands and the
+             cached winner is dispatched. The choosers still run (their
+             advisory pick lands in stats), but the measured winner decides.
+
+Each chooser records its decision provenance in the stats dict it is passed
+(``kernel_source``/``method_source`` in {"static", "fitted"}); ``spgemm``
+overwrites ``kernel_source`` with "measured" when measure mode decided.
+
+Tie directions at the cutoffs are part of the contract:
+``avg_row_flops == cutoff`` selects 'flat_lp' (the rule is ``< cutoff`` →
+'dense_acc'), and ``dense_bytes == DENSE_BYTES_BUDGET`` still selects
+'dense' (the guard is ``<= budget``).
 """
 from __future__ import annotations
 
@@ -71,13 +94,24 @@ def choose_method(a: CSR, b: CSR, stats: dict) -> str:
     plus an (m, k) int32 occupancy mask, so the memory guard must scale with
     the operand value dtype: hard-coding 4-byte values would undercount f64
     inputs 2x and let them breach DENSE_BYTES_BUDGET.
+
+    ``stats`` is written, not read: the decision inputs (``dense_bytes``)
+    and provenance (``method_source``) land there so dispatch is observable
+    without recomputing. The k cutoff comes from the active fitted table
+    when one covers this backend (see module docstring), else the paper
+    constant. ``dense_bytes == DENSE_BYTES_BUDGET`` is still 'dense'.
     """
+    from repro.core import autotune  # local: meta must import without jax
+
     k = b.k
     # numpy promotion on purpose: jnp.result_type would canonicalize f64 to
     # f32 when x64 is disabled and silently restore the undercount
     val_itemsize = np.result_type(a.values.dtype, b.values.dtype).itemsize
     dense_bytes = a.m * k * (val_itemsize + 4)  # values + int32 occupancy
-    if k < DENSE_K_CUTOFF and dense_bytes <= DENSE_BYTES_BUDGET:
+    k_cutoff, source = autotune.dense_k_cutoff()
+    stats["dense_bytes"] = dense_bytes
+    stats["method_source"] = source
+    if k < k_cutoff and dense_bytes <= DENSE_BYTES_BUDGET:
         return "dense"
     return "sparse"
 
@@ -90,8 +124,18 @@ def choose_kernel(a: CSR, b: CSR, stats: dict) -> str:
     ``stats`` must carry ``fm`` (the total multiplication count, from
     ``flops_stats``); a missing ``fm`` raises ``KeyError`` rather than
     silently defaulting to 0, which would always select 'dense_acc' and hide
-    meta-dispatch bugs.
+    meta-dispatch bugs. The decision inputs (``avg_row_flops``) and
+    provenance (``kernel_source`` in {"static", "fitted"}) are written back
+    so dispatch is observable without recomputing.
+
+    The cutoff comes from the active fitted table when one covers this
+    backend (see module docstring), else the paper's 256. The tie at
+    ``avg_row_flops == cutoff`` goes to 'flat_lp': the paper's rule selects
+    KKMEM strictly *below* the cutoff, and at the boundary the LP hash's
+    occupancy advantage is already in play.
     """
+    from repro.core import autotune  # local: meta must import without jax
+
     if "fm" not in stats:
         raise KeyError(
             "choose_kernel requires stats['fm'] (total multiplications; see "
@@ -100,7 +144,10 @@ def choose_kernel(a: CSR, b: CSR, stats: dict) -> str:
         )
     fm = max(int(stats["fm"]), 1)
     avg_row_flops = fm / max(a.m, 1)
-    return "dense_acc" if avg_row_flops < AVG_ROW_FLOPS_CUTOFF else "flat_lp"
+    cutoff, source = autotune.avg_row_flops_cutoff()
+    stats["avg_row_flops"] = avg_row_flops
+    stats["kernel_source"] = source
+    return "dense_acc" if avg_row_flops < cutoff else "flat_lp"
 
 
 def estimate_ars(fm: int) -> int:

@@ -80,6 +80,10 @@ class PlanCache:
         self.max_bytes = max_bytes
         self._entries: OrderedDict[str, Any] = OrderedDict()
         self._nbytes: dict[str, int] = {}
+        # Per-entry sidecar metadata (e.g. the autotuner's measured replay
+        # winner, keyed by dtype-qualified meta keys). Lives and dies with
+        # the entry: eviction and clear() drop it.
+        self._meta: dict[str, dict] = {}
         self._lock = threading.Lock()
         self.total_bytes = 0
         self.hits = 0
@@ -119,12 +123,34 @@ class PlanCache:
             ):
                 old_key, _ = self._entries.popitem(last=False)
                 self.total_bytes -= self._nbytes.pop(old_key)
+                self._meta.pop(old_key, None)
                 self.evictions += 1
+
+    def set_meta(self, key: str, meta_key, value) -> bool:
+        """Attach sidecar metadata to a *cached* entry.
+
+        Returns False (and stores nothing) when ``key`` is not resident —
+        metadata must never outlive, or predate, the plan it annotates.
+        ``meta_key`` should qualify everything the structure key does not
+        cover (the autotuner uses ``("tuned_backend", a_dtype, b_dtype)``
+        because the structure key deliberately excludes value dtypes).
+        """
+        with self._lock:
+            if key not in self._entries:
+                return False
+            self._meta.setdefault(key, {})[meta_key] = value
+            return True
+
+    def get_meta(self, key: str, meta_key, default=None):
+        """Sidecar metadata for a cached entry, or ``default``."""
+        with self._lock:
+            return self._meta.get(key, {}).get(meta_key, default)
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self._nbytes.clear()
+            self._meta.clear()
             self.total_bytes = 0
             self.hits = self.misses = self.evictions = 0
 

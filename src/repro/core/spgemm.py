@@ -582,7 +582,9 @@ def resolve_plan(a: CSR, b: CSR, fm_cap: int, policy: str, cache, key=None):
     caller that already hashed the structure (the grouping loop) skip the
     second O(nnz) digest.
 
-    Returns (plan, cache_state) with cache_state in {"hit", "miss", "bypass"}.
+    Returns (plan, cache_state, key) with cache_state in {"hit", "miss",
+    "bypass"} — the key is returned so callers can attach per-entry
+    metadata (e.g. the autotuner's measured winner) without re-hashing.
     """
     from repro.core.plan_cache import structure_key  # cycle-free late import
 
@@ -591,18 +593,54 @@ def resolve_plan(a: CSR, b: CSR, fm_cap: int, policy: str, cache, key=None):
     if cache is not None:
         plan = cache.get(key)
         if plan is not None:
-            return plan, "hit"
+            return plan, "hit", key
     sx = expand_and_sort(a, b, fm_cap)
     nnz_cap = round_capacity(int(jnp.sum(sx.row_sizes)), policy)
     plan = plan_from_sorted(sx, b.k, nnz_cap)
     if cache is None:
-        return plan, "bypass"
+        return plan, "bypass", key
     cache.put(key, plan)
-    return plan, "miss"
+    return plan, "miss", key
+
+
+def _measured_replay(plan, a: CSR, b: CSR, cache, cache_key: str):
+    """tune="measure" replay: dispatch the measured-fastest replay backend.
+
+    Winner resolution order (each layer avoids re-tuning the next):
+      1. the plan-cache entry's sidecar meta (dtype-qualified — the
+         structure key excludes value dtypes on purpose),
+      2. the autotuner's structure-stats bucket table,
+      3. a first-sight micro-bench of the eligible replay backends on the
+         real operands (recorded in the bucket table).
+    The winner is written back to the plan-cache entry so later replays and
+    ``spgemm_grouped`` re-dispatch it with zero re-tuning.
+    """
+    from repro.core import autotune
+    from repro.core.executor import _apply, replay_candidates
+
+    interp = jax.default_backend() != "tpu"
+    meta_key = ("tuned_backend", str(a.values.dtype), str(b.values.dtype))
+    winner = cache.get_meta(cache_key, meta_key) if cache is not None else None
+    if winner is not None:
+        autotune.TUNE_COUNTS["plan_meta_hit"] += 1
+    else:
+        bkey = autotune.bucket_key(
+            a.m, b.k, plan.seg_ids.shape[0], a.values.dtype, b.values.dtype,
+            table="replay")
+        winner = autotune.lookup_measured(bkey)
+        if winner is None:
+            winner, _ = autotune.measure_and_record(
+                bkey, replay_candidates(plan, a.values, b.values, interp))
+        if cache is not None:
+            cache.set_meta(cache_key, meta_key, winner)
+    values = _apply(plan, a.values, b.values, backend=winner,
+                    interpret=interp)
+    return values, winner
 
 
 def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
            pad_policy: str | None = None, plan_cache=None,
+           tune: str | None = None,
            mesh=None, mesh_axis: str = "data",
            b_placement: str = "replicated") -> SpgemmResult:
     """Full two-phase SpGEMM with the KKSPGEMM meta-algorithm's method choice
@@ -636,10 +674,22 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     (``kernels/spgemm_lp.py``; interpret mode off-TPU) — with an automatic
     XLA fallback for f64/int operand dtypes, which the f32-accumulating
     kernel must not touch. ``stats["kernel"]`` always records what
-    ``choose_kernel`` would pick ('dense_acc' below 256 avg row flops,
-    'flat_lp' at or above); ``stats["lp_backend"]`` records which backend the
-    lp method actually used ("pallas" or "xla").
+    ``choose_kernel`` would pick ('dense_acc' below the avg-row-flops
+    cutoff, 'flat_lp' at or above); ``stats["lp_backend"]`` records which
+    backend the lp method actually used ("pallas" or "xla").
+
+    tune="measure" (sparse/auto-sparse only) switches the replay dispatch to
+    the autotuner: on first sight of a structure-stats bucket the eligible
+    replay backends are micro-benchmarked on the real operands and the
+    winner is cached — in the autotuner's bucket table and in the plan-cache
+    entry — so replays re-dispatch it with zero re-tuning
+    (``stats["kernel_source"] == "measured"``, ``stats["replay_backend"]``
+    records the winner). The dense method ignores tune (its choosers are
+    advisory there, and KKDENSE has no replay to re-dispatch); method="lp"
+    rejects it (lp *is* an explicit backend pin); mesh= rejects it (the
+    sharded replay is XLA-only, see ROADMAP).
     """
+    from repro.core import autotune  # cycle-free
     from repro.core.meta import choose_kernel, choose_method  # cycle-free
     from repro.core.plan_cache import default_plan_cache
 
@@ -648,7 +698,19 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         raise ValueError(
             f"unknown method {method!r}; expected 'auto', 'dense', 'sparse' "
             f"or 'lp'")
+    autotune.validate_tune(tune)
+    if tune == "measure" and method == "lp":
+        raise ValueError(
+            "tune='measure' does not compose with method='lp': 'lp' pins "
+            "the LP-hash kernel explicitly, while measure mode exists to "
+            "pick the replay backend empirically — use method='sparse' (or "
+            "'auto') with tune='measure'")
     if mesh is not None:
+        if tune is not None:
+            raise ValueError(
+                "tune= does not support mesh= yet: the sharded replay runs "
+                "the XLA segment-sum only, so there are no per-shard "
+                "candidates to measure (see ROADMAP)")
         if method == "dense":
             raise ValueError(
                 "mesh= requires the sparse method: KKDENSE has no "
@@ -698,12 +760,18 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     stats["fm_cap"] = fm_cap
     stats["kernel"] = choose_kernel(a, b, stats)  # the paper's GPU rule
 
-    plan, cache_state = resolve_plan(a, b, fm_cap, policy, cache)
+    plan, cache_state, skey = resolve_plan(a, b, fm_cap, policy, cache)
     if method == "lp":
         values, stats["lp_backend"] = lp_replay_values(
             plan, a.values, b.values)
+        stats["replay_backend"] = stats["lp_backend"]
+    elif tune == "measure":
+        values, winner = _measured_replay(plan, a, b, cache, skey)
+        stats["replay_backend"] = winner
+        stats["kernel_source"] = "measured"  # overrides choose_kernel's
     else:
         values = numeric_reuse(plan, a.values, b.values)
+        stats["replay_backend"] = "xla"
     c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
             shape=(a.m, b.k))
     stats["cache"] = cache_state

@@ -1,0 +1,51 @@
+"""One-stop registry for the repo's dispatch/trace telemetry counters.
+
+Every subsystem keeps its own module-level ``Counter`` next to the code it
+instruments (retrace counts in ``core.spgemm``, structure-hash counts in
+``core.plan_cache``, executor dispatches in ``core.executor``, numeric-kernel
+picks in ``kernels.ops``, autotuner activity in ``core.autotune``). This
+module aggregates them so tests and benchmarks can snapshot or reset *all*
+instrumentation in one call instead of each fixture hand-clearing whichever
+counters it happens to know about.
+
+``reset_all()`` clears counters only — it does not touch the autotuner's
+fitted-threshold registry or measured-winner buckets (that's
+``autotune.reset_tuner()``, which conftest composes with this).
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core.autotune import TUNE_COUNTS, reset_tune_counts
+from repro.core.executor import DISPATCH_COUNTS, reset_dispatch_counts
+from repro.core.plan_cache import HASH_COUNTS, reset_hash_counts
+from repro.core.spgemm import TRACE_COUNTS, reset_trace_counts
+from repro.kernels.ops import KERNEL_COUNTS, reset_kernel_counts
+
+# name -> live Counter object (shared with the owning module, not copies)
+ALL_COUNTERS: dict[str, Counter] = {
+    "trace": TRACE_COUNTS,
+    "hash": HASH_COUNTS,
+    "dispatch": DISPATCH_COUNTS,
+    "kernel": KERNEL_COUNTS,
+    "tune": TUNE_COUNTS,
+}
+
+_RESETS = (
+    reset_trace_counts,
+    reset_hash_counts,
+    reset_dispatch_counts,
+    reset_kernel_counts,
+    reset_tune_counts,
+)
+
+
+def snapshot() -> dict[str, dict[str, int]]:
+    """A plain-dict copy of every counter, for diffing across a region."""
+    return {name: dict(c) for name, c in ALL_COUNTERS.items()}
+
+
+def reset_all() -> None:
+    """Clear every registered telemetry counter."""
+    for reset in _RESETS:
+        reset()

@@ -52,15 +52,21 @@ def resolve_numeric_kernel(a: CSR, b: CSR, kernel: str = "auto",
                            fm: int | None = None) -> str:
     """Resolve ``kernel`` to a concrete numeric-phase implementation.
 
-    "auto" applies ``core.meta.choose_kernel`` (the paper's avg-row-flops
-    rule) after the dtype guard: f64/int accumulation cannot run on the f32
-    Pallas kernels, so those inputs resolve to "xla" regardless of regime.
+    "auto" applies ``core.meta.choose_kernel`` (the avg-row-flops rule,
+    static or fitted — see ``core.autotune``) after the dtype guard: f64/int
+    accumulation cannot run on the f32 Pallas kernels, so those inputs
+    resolve to "xla" regardless of regime. When the autotuner holds a
+    measured winner for this problem's structure-stats bucket (recorded by
+    ``numeric_values(..., tune="measure")``), that winner takes precedence
+    over the threshold rule — measured beats fitted beats static.
 
     fm: the total multiplication count, if the caller already has it (e.g.
     from ``spgemm`` stats). Computing it here costs an O(nnz) ``flops_stats``
     pass plus a device->host sync per call — replay loops over a pinned
     structure should pass their constant ``fm`` instead of re-paying that.
     """
+    from repro.core import autotune  # lazy: avoid kernels<->core cycle
+
     if kernel not in NUMERIC_KERNELS:
         raise ValueError(
             f"unknown kernel {kernel!r}; expected one of {NUMERIC_KERNELS}")
@@ -78,6 +84,10 @@ def resolve_numeric_kernel(a: CSR, b: CSR, kernel: str = "auto",
         return "xla"
     if fm is None:
         fm = int(flops_stats(a, b.row_nnz())[0])
+    measured = autotune.lookup_measured(autotune.bucket_key(
+        a.m, b.k, fm, a.values.dtype, b.values.dtype, table="numeric"))
+    if measured is not None:
+        return measured
     return choose_kernel(a, b, {"fm": fm})
 
 
@@ -98,7 +108,8 @@ def symbolic_rowsizes(a: CSR, b: CSR, *, pad_policy: str | None = None) -> jax.A
 
 def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
                    pad_policy: str | None = None, kernel: str = "auto",
-                   fm: int | None = None) -> jax.Array:
+                   fm: int | None = None,
+                   tune: str | None = None) -> jax.Array:
     """Kernel-backed numeric phase: ELL-layout values of C at the symbolic
     structure ``c_idx``/``c_nnz`` (the Reuse entry point). Widths bucketed.
 
@@ -108,24 +119,58 @@ def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
     f64/int fallback). Replay loops should pass a concrete ``kernel`` or a
     precomputed ``fm`` — "auto" without ``fm`` pays an O(nnz) flops pass and
     a host sync per call to apply the selection rule.
+
+    tune="measure" (with kernel="auto" only) replaces the threshold rule by
+    a first-sight micro-bench: the eligible kernels are timed on these real
+    operands, the winner runs and is recorded in the autotuner's bucket
+    table — later same-bucket calls (through here *or* through
+    ``resolve_numeric_kernel``) dispatch it with zero re-tuning.
     """
-    resolved = resolve_numeric_kernel(a, b, kernel, fm=fm)
-    KERNEL_COUNTS[resolved] += 1
+    from repro.core import autotune  # lazy: avoid kernels<->core cycle
+
+    autotune.validate_tune(tune)
+    if tune == "measure" and kernel != "auto":
+        raise ValueError(
+            f"tune='measure' requires kernel='auto' (got kernel={kernel!r}):"
+            f" measure mode picks the kernel empirically, an explicit pin "
+            f"contradicts it")
     ea = csr_to_ell(a)
     eb = csr_to_ell(b)
-    if resolved == "xla":
-        return ref.spgemm_numeric_ref(
-            ea.indices, ea.values, eb.indices, eb.values, c_idx, c_nnz, b.k)
-    if resolved == "flat_lp":
-        return spgemm_lp_bucketed(
+
+    def run(kname: str) -> jax.Array:
+        if kname == "xla":
+            return ref.spgemm_numeric_ref(
+                ea.indices, ea.values, eb.indices, eb.values, c_idx, c_nnz,
+                b.k)
+        if kname == "flat_lp":
+            return spgemm_lp_bucketed(
+                ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
+                eb.row_nnz, c_idx, c_nnz, pad_policy=pad_policy,
+                interpret=_interpret(),
+            )
+        return spgemm_numeric_bucketed(
             ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
-            eb.row_nnz, c_idx, c_nnz, pad_policy=pad_policy,
+            c_idx, c_nnz, k=b.k, pad_policy=pad_policy,
             interpret=_interpret(),
         )
-    return spgemm_numeric_bucketed(
-        ea.indices, ea.values, ea.row_nnz, eb.indices, eb.values,
-        c_idx, c_nnz, k=b.k, pad_policy=pad_policy, interpret=_interpret(),
-    )
+
+    if tune == "measure":
+        if fm is None:
+            fm = int(flops_stats(a, b.row_nnz())[0])
+        bkey = autotune.bucket_key(a.m, b.k, fm, a.values.dtype,
+                                   b.values.dtype, table="numeric")
+        resolved = autotune.lookup_measured(bkey)
+        if resolved is None:
+            # candidate set = the dtype-eligible rows of the selection table
+            cands = {"xla": lambda: run("xla")}
+            if f32_accumulation_ok(a.values.dtype, b.values.dtype):
+                cands["dense_acc"] = lambda: run("dense_acc")
+                cands["flat_lp"] = lambda: run("flat_lp")
+            resolved, _ = autotune.measure_and_record(bkey, cands)
+    else:
+        resolved = resolve_numeric_kernel(a, b, kernel, fm=fm)
+    KERNEL_COUNTS[resolved] += 1
+    return run(resolved)
 
 
 def pallas_spgemm(a: CSR, b: CSR, *,

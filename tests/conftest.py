@@ -31,6 +31,18 @@ def _seed():
     np.random.seed(0)
 
 
+@pytest.fixture(autouse=True)
+def _reset_telemetry():
+    """Per-test telemetry + tuner isolation: every counter starts at zero
+    and no fitted table / measured winner leaks across tests (the tuner
+    registries are process-global). Lazy imports keep collection cheap."""
+    from repro.core import autotune, telemetry
+
+    telemetry.reset_all()
+    autotune.reset_tuner()
+    yield
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches():
     """Drop compiled-executable references between modules: the full suite

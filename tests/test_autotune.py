@@ -1,0 +1,395 @@
+"""Autotuner tests: selection boundaries, threshold fitting, measure mode.
+
+Covers the static/fitted/measured precedence end to end:
+  * the exact tie directions of the static rules (choose_kernel at
+    avg_row_flops == 256, choose_method at dense_bytes == budget) and the
+    round_capacity bucket edges the tuner keys on,
+  * fit_thresholds on synthetic sweep rows (+ save/load round-trip, backend
+    fallback when no fitted row covers the current backend),
+  * tune="measure" through every entry point — spgemm, ReuseExecutor,
+    spgemm_grouped, numeric_values — with the zero-re-tuning contract
+    asserted through TUNE_COUNTS/TRACE_COUNTS telemetry.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AVG_ROW_FLOPS_CUTOFF,
+    BackendFit,
+    PlanCache,
+    ReuseExecutor,
+    TUNE_COUNTS,
+    TunedThresholds,
+    choose_kernel,
+    choose_method,
+    fit_thresholds,
+    round_capacity,
+    set_tuned_thresholds,
+    spgemm,
+    spgemm_grouped,
+)
+from repro.core import autotune, telemetry
+from repro.core.meta import CAPACITY_FLOOR, DENSE_BYTES_BUDGET
+from repro.core.plan_cache import HASH_COUNTS
+from repro.core.spgemm import TRACE_COUNTS
+from repro.kernels.ops import (
+    KERNEL_COUNTS,
+    numeric_values,
+    resolve_numeric_kernel,
+)
+from repro.sparse import (
+    CSR,
+    dense_spgemm_oracle,
+    gustavson_ell_structure,
+    random_csr,
+)
+
+
+# ---------------------------------------------------------------- boundaries
+
+
+def test_round_capacity_floor_and_pow2_edges():
+    # CAPACITY_FLOOR clamps tiny sizes under both policies
+    assert round_capacity(1, "pow2") == CAPACITY_FLOOR
+    assert round_capacity(1, "exact8") == CAPACITY_FLOOR
+    assert CAPACITY_FLOOR == 8
+    # pow2: exact powers stay put, +1 doubles
+    assert round_capacity(8, "pow2") == 8
+    assert round_capacity(9, "pow2") == 16
+    assert round_capacity(16, "pow2") == 16
+    assert round_capacity(17, "pow2") == 32
+    # exact8: next multiple of 8
+    assert round_capacity(9, "exact8") == 16
+    assert round_capacity(16, "exact8") == 16
+    assert round_capacity(17, "exact8") == 24
+
+
+def test_choose_kernel_tie_at_cutoff_selects_flat_lp():
+    """avg_row_flops == 256 exactly -> flat_lp (the rule is `< cutoff` ->
+    dense_acc; the boundary belongs to the LP side). Documented contract."""
+    a = random_csr(8, 16, 2.0, 1)
+    b = random_csr(16, 16, 2.0, 2)
+    stats = {"fm": AVG_ROW_FLOPS_CUTOFF * a.m}
+    assert choose_kernel(a, b, stats) == "flat_lp"
+    assert stats["avg_row_flops"] == float(AVG_ROW_FLOPS_CUTOFF)
+    assert stats["kernel_source"] == "static"
+    # one flop below the boundary flips to dense_acc
+    below = {"fm": AVG_ROW_FLOPS_CUTOFF * a.m - 1}
+    assert choose_kernel(a, b, below) == "dense_acc"
+
+
+def test_choose_method_tie_at_dense_bytes_budget():
+    """dense_bytes == DENSE_BYTES_BUDGET exactly is still 'dense' (the guard
+    is `<= budget`); one more row tips over to 'sparse'."""
+    base = random_csr(4, 8, 2.0, 3)  # f32; only shapes/dtypes matter below
+    m, k = 4096, 32768
+    assert m * k * (4 + 4) == DENSE_BYTES_BUDGET
+    a = CSR(base.indptr, base.indices, base.values, shape=(m, 64))
+    b = CSR(base.indptr, base.indices, base.values, shape=(64, k))
+    stats = {}
+    assert choose_method(a, b, stats) == "dense"
+    assert stats["dense_bytes"] == DENSE_BYTES_BUDGET
+    assert stats["method_source"] == "static"
+    a2 = CSR(base.indptr, base.indices, base.values, shape=(m + 1, 64))
+    assert choose_method(a2, b, {}) == "sparse"
+
+
+# ------------------------------------------------------------------- fitting
+
+
+def _sweep_rows(backend="cpu", platform="cpu"):
+    """Synthetic accumulator sweep: dense wins below ~32 arf, LP above."""
+    rows = []
+    for regime, arf, t_dense, t_lp in [
+        ("lo", 8.0, 10.0, 30.0),
+        ("mid", 64.0, 25.0, 12.0),
+        ("hi", 512.0, 80.0, 9.0),
+    ]:
+        for arm, us in (("dense_acc", t_dense), ("segsum", 999.0),
+                        ("lp_hash", t_lp)):
+            rows.append({
+                "name": f"accumulators/{regime}/{arm}", "us_per_call": us,
+                "backend": backend, "platform": platform,
+                "derived": {"avg_row_flops": arf},
+            })
+    return rows
+
+
+def test_fit_thresholds_finds_crossover_and_round_trips(tmp_path):
+    table = fit_thresholds({"rows": _sweep_rows(), "backend": "cpu",
+                            "platform": "cpu", "jax_version": "test"})
+    fit = table.fits["cpu|cpu"]
+    # crossover between 8 and 64 -> geometric midpoint sqrt(8*64)
+    assert fit.avg_row_flops_cutoff == pytest.approx(math.sqrt(8 * 64))
+    assert fit.n_points == 3
+    assert fit.points == ((8.0, "dense_acc"), (64.0, "flat_lp"),
+                          (512.0, "flat_lp"))
+    # fitted-by-construction: total picked time <= static rule's total
+    static_total = 10.0 + 25.0 + 9.0  # static 256: dense, dense, lp
+    fitted_total = 10.0 + 12.0 + 9.0
+    assert fitted_total <= static_total
+
+    path = tmp_path / "tuned.json"
+    table.save(str(path))
+    loaded = TunedThresholds.load(str(path))
+    assert loaded.fits == table.fits
+    assert TunedThresholds.from_json(table.to_json()).fits == table.fits
+
+
+def test_fit_thresholds_inf_cutoff_serializes():
+    """A backend where dense always wins fits cutoff=inf; 'inf' must
+    survive the JSON round-trip (bare Infinity is non-standard JSON)."""
+    rows = [r for r in _sweep_rows() if "lo" in r["name"]]
+    for r in rows:  # make LP lose even at high arf
+        if r["name"].endswith("lp_hash"):
+            r["us_per_call"] = 500.0
+    table = fit_thresholds({"rows": rows})
+    assert math.isinf(table.fits["cpu|cpu"].avg_row_flops_cutoff)
+    rt = TunedThresholds.from_json(table.to_json())
+    assert math.isinf(rt.fits["cpu|cpu"].avg_row_flops_cutoff)
+
+
+def test_fitted_cutoff_consulted_by_choose_kernel():
+    """An active fitted row for this backend overrides the static 256."""
+    key = autotune.backend_key()
+    set_tuned_thresholds(TunedThresholds(
+        {key: BackendFit(avg_row_flops_cutoff=1.0)}))
+    a = random_csr(24, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    stats = {"fm": 4 * a.m}  # modest rows: static rule says dense_acc
+    assert choose_kernel(a, b, stats) == "flat_lp"  # fitted cutoff 1.0
+    assert stats["kernel_source"] == "fitted"
+    # flows through spgemm stats too
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    assert res.stats["kernel"] == "flat_lp"
+    assert res.stats["kernel_source"] == "fitted"
+    set_tuned_thresholds(None)
+    assert choose_kernel(a, b, dict(stats)) == "dense_acc"
+
+
+def test_tuner_fallback_without_backend_row():
+    """A fitted table covering only some other backend leaves this backend
+    on the static constants (the documented fallback)."""
+    set_tuned_thresholds(TunedThresholds(
+        {"tpu|TPU v4": BackendFit(avg_row_flops_cutoff=1.0)}))
+    cutoff, source = autotune.avg_row_flops_cutoff()
+    assert (cutoff, source) == (float(AVG_ROW_FLOPS_CUTOFF), "static")
+    a = random_csr(24, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    stats = {"fm": 4 * a.m}
+    assert choose_kernel(a, b, stats) == "dense_acc"
+    assert stats["kernel_source"] == "static"
+
+
+def test_backend_prefix_fallback_match():
+    """Older artifacts keyed by backend name only: a unique backend-prefix
+    row matches; ambiguity (two rows, same prefix) does not."""
+    key = autotune.backend_key()
+    base = key.split("|", 1)[0]
+    tab = TunedThresholds({f"{base}|some-other-kind":
+                           BackendFit(avg_row_flops_cutoff=7.0)})
+    assert tab.for_backend(key).avg_row_flops_cutoff == 7.0
+    tab.fits[f"{base}|third-kind"] = BackendFit(avg_row_flops_cutoff=9.0)
+    if key not in tab.fits:  # ambiguous prefix -> no match
+        assert tab.for_backend(key) is None
+
+
+# -------------------------------------------------------------- measure mode
+
+
+def test_spgemm_measure_first_sight_and_replay():
+    """First sight pays exactly one micro-bench; the pinned-plan replay
+    re-dispatches the cached winner with zero re-tuning and zero retraces."""
+    cache = PlanCache()
+    a = random_csr(32, 40, 3.0, 11)
+    b = random_csr(40, 36, 2.5, 12)
+    res = spgemm(a, b, method="sparse", plan_cache=cache, tune="measure")
+    assert TUNE_COUNTS["micro_bench"] == 1
+    assert res.stats["kernel_source"] == "measured"
+    winner = res.stats["replay_backend"]
+    assert winner in ("xla", "pallas", "pallas_lp")
+    np.testing.assert_allclose(np.asarray(res.c.to_dense()),
+                               dense_spgemm_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+    # replay: same structure, new values -> cached winner, no re-tuning
+    rng = np.random.default_rng(0)
+    a2 = CSR(a.indptr, a.indices,
+             jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32),
+             a.shape)
+    traces0 = sum(TRACE_COUNTS.values())
+    res2 = spgemm(a2, b, method="sparse", plan_cache=cache, tune="measure")
+    assert res2.stats["cache"] == "hit"
+    assert res2.stats["replay_backend"] == winner
+    assert TUNE_COUNTS["micro_bench"] == 1  # no second sweep
+    assert TUNE_COUNTS["plan_meta_hit"] >= 1
+    assert sum(TRACE_COUNTS.values()) == traces0  # zero retraces
+    np.testing.assert_allclose(np.asarray(res2.c.to_dense()),
+                               dense_spgemm_oracle(a2, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spgemm_measure_without_cache_uses_bucket_table():
+    """plan_cache=False still avoids re-tuning: the bucket table catches the
+    second sighting of the same structure-stats bucket."""
+    a = random_csr(32, 40, 3.0, 11)
+    b = random_csr(40, 36, 2.5, 12)
+    spgemm(a, b, method="sparse", plan_cache=False, tune="measure")
+    assert TUNE_COUNTS["micro_bench"] == 1
+    spgemm(a, b, method="sparse", plan_cache=False, tune="measure")
+    assert TUNE_COUNTS["micro_bench"] == 1
+    assert TUNE_COUNTS["bucket_hit"] == 1
+
+
+def test_executor_measure_mode():
+    """ReuseExecutor(tune='measure'): one sweep on first apply, pinned
+    winner after; a second same-bucket executor reuses the bucket entry."""
+    a = random_csr(48, 48, 3.0, 21)
+    b = random_csr(48, 48, 3.0, 22)
+    ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache(),
+                                     tune="measure")
+    assert ex.kernel_source == "static"  # nothing measured yet
+    out1 = ex.apply(a.values, b.values)
+    assert TUNE_COUNTS["micro_bench"] == 1
+    assert ex.kernel_source == "measured"
+    winner = ex.backend
+    # oracle correctness for whatever won
+    ref = ReuseExecutor(ex.plan, backend="xla").apply(a.values, b.values)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+    traces0 = sum(TRACE_COUNTS.values())
+    hashes0 = sum(HASH_COUNTS.values())
+    for _ in range(3):
+        ex.apply(a.values, b.values)
+    assert TUNE_COUNTS["micro_bench"] == 1  # zero re-tuning across replays
+    assert sum(TRACE_COUNTS.values()) == traces0  # zero retraces
+    assert sum(HASH_COUNTS.values()) == hashes0  # zero re-hashes
+
+    ex2 = ReuseExecutor(ex.plan, tune="measure")
+    ex2.apply(a.values, b.values)
+    assert TUNE_COUNTS["micro_bench"] == 1  # bucket hit, no new sweep
+    assert TUNE_COUNTS["bucket_hit"] >= 1
+    assert ex2.backend == winner
+
+
+def test_executor_measure_rejects_explicit_backend():
+    a = random_csr(16, 16, 2.0, 1)
+    b = random_csr(16, 16, 2.0, 2)
+    res = spgemm(a, b, method="sparse", plan_cache=PlanCache())
+    with pytest.raises(ValueError, match="requires backend='auto'"):
+        ReuseExecutor(res.plan, backend="pallas", tune="measure")
+    with pytest.raises(ValueError, match="unknown tune mode"):
+        ReuseExecutor(res.plan, tune="always")
+
+
+def test_numeric_values_measure_and_resolver_precedence():
+    """numeric_values(tune='measure') sweeps the ELL-table kernels once;
+    resolve_numeric_kernel then dispatches the measured winner (measured
+    beats the threshold rule)."""
+    a = random_csr(24, 30, 3.0, 7)
+    b = random_csr(30, 20, 2.0, 8)
+    c_idx, c_nnz = (jnp.asarray(x) for x in gustavson_ell_structure(a, b))
+    got = numeric_values(a, b, c_idx, c_nnz, tune="measure")
+    assert TUNE_COUNTS["micro_bench"] == 1
+    winner = [k for k, v in KERNEL_COUNTS.items() if v][0]
+    assert winner in ("dense_acc", "flat_lp", "xla")
+    dense = np.zeros((a.m, b.k), np.float32)
+    g, ci, cn = np.asarray(got), np.asarray(c_idx), np.asarray(c_nnz)
+    for i in range(a.m):
+        dense[i, ci[i, : cn[i]]] = g[i, : cn[i]]
+    np.testing.assert_allclose(dense, dense_spgemm_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+    # the resolver consults the measured bucket before the threshold rule
+    assert resolve_numeric_kernel(a, b) == winner
+    assert TUNE_COUNTS["bucket_hit"] >= 1
+    # second call re-dispatches without a second sweep
+    numeric_values(a, b, c_idx, c_nnz, tune="measure")
+    assert TUNE_COUNTS["micro_bench"] == 1
+    with pytest.raises(ValueError, match="requires kernel='auto'"):
+        numeric_values(a, b, c_idx, c_nnz, kernel="xla", tune="measure")
+
+
+def test_spgemm_grouped_measure_reuses_plan_meta():
+    """Grouped singleton dispatch measures once; the next grouped call finds
+    the winner in the plan-cache entry (plan_meta_hit, no new sweep)."""
+    cache = PlanCache()
+    a = random_csr(32, 32, 3.0, 31)
+    b = random_csr(32, 32, 3.0, 32)
+    out1 = spgemm_grouped([(a, b)], plan_cache=cache, tune="measure")
+    assert TUNE_COUNTS["micro_bench"] == 1
+    out2 = spgemm_grouped([(a, b)], plan_cache=cache, tune="measure")
+    assert TUNE_COUNTS["micro_bench"] == 1  # zero re-tuning
+    assert TUNE_COUNTS["plan_meta_hit"] >= 1
+    np.testing.assert_allclose(np.asarray(out2[0].to_dense()),
+                               dense_spgemm_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out1[0].to_dense()),
+                               np.asarray(out2[0].to_dense()),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="requires backend='auto'"):
+        spgemm_grouped([(a, b)], plan_cache=cache, backend="xla",
+                       tune="measure")
+
+
+def test_measure_mode_validation_errors():
+    a = random_csr(16, 16, 2.0, 1)
+    b = random_csr(16, 16, 2.0, 2)
+    with pytest.raises(ValueError, match="unknown tune mode"):
+        spgemm(a, b, tune="nope")
+    with pytest.raises(ValueError, match="does not compose with method='lp'"):
+        spgemm(a, b, method="lp", tune="measure")
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="does not support mesh"):
+        spgemm(a, b, mesh=mesh, tune="measure")
+
+
+def test_measure_respects_dtype_guard():
+    """int operands: measure mode must only sweep the XLA candidate — the
+    f32-accumulating kernels are ineligible, so the winner is 'xla'."""
+    a = random_csr(16, 16, 2.0, 1)
+    b = random_csr(16, 16, 2.0, 2)
+    ai = CSR(a.indptr, a.indices, jnp.ones(a.nnz_cap, jnp.int32), a.shape)
+    bi = CSR(b.indptr, b.indices, jnp.ones(b.nnz_cap, jnp.int32), b.shape)
+    res = spgemm(ai, bi, method="sparse", plan_cache=PlanCache(),
+                 tune="measure")
+    assert res.stats["replay_backend"] == "xla"
+
+
+# ----------------------------------------------------- plan-cache meta + hygiene
+
+
+def test_plan_cache_meta_lifecycle():
+    cache = PlanCache(capacity=1)
+    cache.put("k1", {"dummy": np.zeros(4)})  # plan contents irrelevant here
+    assert cache.set_meta("k1", "winner", "xla")
+    assert cache.get_meta("k1", "winner") == "xla"
+    # non-resident key: set refuses, get returns default
+    assert not cache.set_meta("k2", "winner", "pallas")
+    assert cache.get_meta("k2", "winner", default="none") == "none"
+    # eviction drops the sidecar meta with the entry
+    cache.put("k2", {"dummy": np.zeros(4)})  # capacity 1 -> evicts k1
+    assert "k1" not in cache
+    assert cache.get_meta("k1", "winner") is None
+    cache.set_meta("k2", "winner", "pallas")
+    cache.clear()
+    assert cache.get_meta("k2", "winner") is None
+
+
+def test_telemetry_reset_all():
+    a = random_csr(16, 16, 2.0, 1)
+    b = random_csr(16, 16, 2.0, 2)
+    spgemm(a, b, method="sparse", plan_cache=PlanCache(), tune="measure")
+    snap = telemetry.snapshot()
+    assert snap["hash"] and snap["tune"]  # something was counted
+    telemetry.reset_all()
+    assert all(not c for c in telemetry.snapshot().values())
+    # reset_all clears counters but NOT the measured-winner buckets
+    assert autotune.measured_table_size() >= 1
+    autotune.reset_tuner()
+    assert autotune.measured_table_size() == 0
