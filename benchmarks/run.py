@@ -25,6 +25,11 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        count on a pinned ShardedReuseExecutor (flat curve =
                        zero per-replay host work); mesh shape in the row
   bench_train_smoke  — LM substrate: tokens/s of a smoke train step
+  bench_guard        — guarded-mode overhead: replay latency per validate
+                       mode (off/host/device), nan_guard and watchdog rows
+                       (overhead ratios vs validate=off), plus a retry_call
+                       machinery row — the failure-model cost artifact
+                       (BENCH_guard_*.json)
   bench_autotune     — autotuner regret table: static vs fitted vs measured
                        kernel picks over the accumulator sweep (regret in us
                        vs the static rule; the acceptance artifact for
@@ -562,6 +567,67 @@ def bench_dist(n_windows=5, window=16):
               "hashes": hashes, "mesh_shape": mesh_shape})
 
 
+def bench_guard(quick: bool = False):
+    """Guarded-mode overhead (the failure model's acceptance artifact).
+
+    One pinned ``ReuseExecutor`` per validation mode on the same problem:
+
+      guard/validate_off    — the baseline replay (no guard object at all)
+      guard/validate_host   — O(1) host-side PlanGuard checks per replay
+      guard/validate_device — + one jitted bitmask reduction per operand
+                              (a scalar device sync per replay)
+      guard/nan_guard       — + the post-replay finiteness check on clean
+                              output (the guard's happy path)
+      guard/watchdog        — deadline-wrapped replay: the dispatch blocks
+                              via block_until_ready inside the step timer,
+                              so the row prices losing async dispatch too
+
+    Every row carries ``overhead`` = us / validate-off us, so the
+    BENCH_guard_*.json trajectory answers "what does hardening cost this
+    PR". A ``guard/retry`` row rides along: retry_call around a closure
+    that fails twice then succeeds, with the deterministic backoff summed
+    (sleep stubbed out — the row prices the machinery, not the waiting).
+    """
+    from repro.runtime import StepWatchdog
+    from repro.runtime.retry import backoff_schedule, retry_call
+
+    a = random_csr(256, 256, 4.0, 51)
+    b = random_csr(256, 256, 4.0, 52)
+
+    def replay_us(**kw):
+        ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache(), **kw)
+        us, _ = timeit(lambda: ex.apply(a.values, b.values))
+        return us
+
+    base = replay_us()
+    emit("guard/validate_off", base, {"overhead": 1.0})
+    for mode in ("host", "device"):
+        us = replay_us(validate=mode)
+        emit(f"guard/validate_{mode}", us, {"overhead": us / base})
+    us_nan = replay_us(nan_guard=True)
+    emit("guard/nan_guard", us_nan, {"overhead": us_nan / base})
+    wd = StepWatchdog(deadline_s=60.0, policy="warn")
+    us_wd = replay_us(watchdog=wd)
+    emit("guard/watchdog", us_wd,
+         {"overhead": us_wd / base, "slow_steps": len(wd.slow_steps)})
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] % 3:  # fails twice, succeeds on the 3rd, every cycle
+            raise RuntimeError("transient")
+        return calls["n"]
+
+    us_retry, _ = timeit(
+        lambda: retry_call(flaky, retries=3, sleep=lambda d: None,
+                           seed=BENCH_SEED))
+    sched = backoff_schedule(3, seed=BENCH_SEED)
+    emit("guard/retry", us_retry,
+         {"attempts_per_success": 3,
+          "backoff_total_s": float(sum(sched))})
+
+
 def bench_train_smoke():
     """End-to-end LM substrate: smoke-model training step throughput."""
     from repro.configs import get_config
@@ -598,6 +664,7 @@ BENCHES = {
     "accumulators": bench_accumulators,
     "autotune": bench_autotune,
     "dist": lambda quick: bench_dist(),
+    "guard": bench_guard,
     "distributed": lambda quick: bench_distributed(),
     "train_smoke": lambda quick: bench_train_smoke(),
 }
@@ -681,6 +748,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_fm_groups(results)
         bench_distributed()
         bench_dist()
+        bench_guard()
         bench_train_smoke()
     print(f"# {len(ROWS)} rows")
     if args.json:

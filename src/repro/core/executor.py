@@ -55,6 +55,15 @@ from repro.core.spgemm import (
     resolve_plan,
     spgemm,
 )
+from repro.runtime import faults
+from repro.runtime.validate import (
+    KernelFallbackError,
+    PlanGuard,
+    SpgemmError,
+    check_plan_compat,
+    resolve_mode,
+)
+from repro.runtime.watchdog import StragglerDetected
 from repro.sparse.formats import CSR
 
 BACKENDS = ("auto", "xla", "pallas", "pallas_lp")
@@ -153,10 +162,23 @@ class ReuseExecutor:
     ``apply_batched`` stays on the XLA vmap formulation regardless: one
     fused dispatch is the point of batching, and the Pallas kernels have no
     batched formulation (module docstring).
+
+    Robustness knobs (PR 7, see ROADMAP "The failure model"):
+    ``validate="off"|"host"|"device"`` builds a pin-time ``PlanGuard`` and
+    checks operand buffers O(1) per replay ("device" adds a finiteness
+    sweep); ``nan_guard=True`` re-runs non-finite outputs once through the
+    XLA oracle and classifies kernel-vs-data; ``watchdog=StepWatchdog(...)``
+    deadlines each replay (blocking on the result); ``on_kernel_failure``
+    picks between the degradation ladder ("fallback": any Pallas failure
+    re-dispatches exact XLA, counted in ``telemetry.FALLBACK_COUNTS`` and
+    visible as ``kernel_source == "fallback"``) and a typed
+    ``KernelFallbackError`` ("raise").
     """
 
     def __init__(self, plan: SpgemmPlan, *, backend: str = "auto",
-                 interpret: bool | None = None, tune: str | None = None):
+                 interpret: bool | None = None, tune: str | None = None,
+                 validate: str | None = "off", nan_guard: bool = False,
+                 watchdog=None, on_kernel_failure: str = "fallback"):
         from repro.core import autotune  # lazy: keep ctor import-light
 
         if plan is None:
@@ -171,6 +193,10 @@ class ReuseExecutor:
                 f"tune='measure' requires backend='auto' (got "
                 f"backend={backend!r}): measure mode picks the backend "
                 f"empirically, an explicit pin contradicts it")
+        if on_kernel_failure not in ("fallback", "raise"):
+            raise ValueError(
+                f"on_kernel_failure must be 'fallback' or 'raise', got "
+                f"{on_kernel_failure!r}")
         self.plan = plan
         self.backend = _resolve_backend(backend)
         self.tune = tune
@@ -180,17 +206,63 @@ class ReuseExecutor:
         self.interpret = (
             jax.default_backend() != "tpu" if interpret is None else interpret
         )
+        # robustness layer (PR 7). Note the executor's validate default is a
+        # literal "off", NOT None: replay is the hot path, and the
+        # $REPRO_VALIDATE escape hatch changing its dispatch behind a
+        # serving loop's back would be a perf landmine — opt in explicitly.
+        self.validate_mode = resolve_mode(validate)
+        self.nan_guard = nan_guard
+        self.watchdog = watchdog
+        self.on_kernel_failure = on_kernel_failure
+        self.nan_events: list[tuple] = []
+        # pin-time plan digest: one host sync here buys O(1) per-replay
+        # operand checks (PlanGuard also vets the plan's own indptr)
+        self._guard = PlanGuard(plan) if self.validate_mode != "off" else None
+        self._skey: str | None = None  # set by from_matrices/pin
+        self._pad_policy: str | None = None
+        self._fm_cap: int | None = None
 
     @classmethod
     def from_matrices(cls, a: CSR, b: CSR, *, pad_policy: str | None = None,
                       plan_cache=None, backend: str = "auto",
                       interpret: bool | None = None,
-                      tune: str | None = None) -> "ReuseExecutor":
+                      tune: str | None = None,
+                      validate: str | None = "off", nan_guard: bool = False,
+                      watchdog=None,
+                      on_kernel_failure: str = "fallback") -> "ReuseExecutor":
         """Build (or fetch from the plan cache) the plan for ``a @ b`` and pin
-        it. This is the one and only structure hash in the executor's life."""
+        it. This is the one and only structure hash in the executor's life.
+        The hash's structure key is retained, enabling ``check_compat``."""
         res = spgemm(a, b, method="sparse", pad_policy=pad_policy,
-                     plan_cache=plan_cache)
-        return cls(res.plan, backend=backend, interpret=interpret, tune=tune)
+                     plan_cache=plan_cache, validate=validate)
+        ex = cls(res.plan, backend=backend, interpret=interpret, tune=tune,
+                 validate=validate, nan_guard=nan_guard, watchdog=watchdog,
+                 on_kernel_failure=on_kernel_failure)
+        ex._skey = res.stats["structure_key"]
+        ex._pad_policy = res.stats["pad_policy"]
+        ex._fm_cap = res.stats["fm_cap"]
+        return ex
+
+    # the serving-facing name for pinning a plan from operands
+    pin = from_matrices
+
+    def check_compat(self, a: CSR, b: CSR) -> None:
+        """Structure-key recheck: would these operands rebuild *this* plan?
+
+        Raises ``PlanMismatchError`` if not (or if the executor was built
+        from a bare plan and has no pinned key). Costs one ``structure_key``
+        digest (HASH_COUNTS bumps) — an opt-in integrity check, not part of
+        the replay hot path.
+        """
+        policy = self._pad_policy or DEFAULT_PAD_POLICY
+        a, b, _, _, fm_cap = prepare_sparse_inputs(a, b, policy)
+        if self._skey is not None and fm_cap != self._fm_cap:
+            from repro.runtime.validate import PlanMismatchError
+
+            raise PlanMismatchError(
+                f"operand expansion bucket fm_cap={fm_cap} != the pinned "
+                f"plan's {self._fm_cap}")
+        check_plan_compat(self._skey, a, b, fm_cap, policy)
 
     def _measure(self, a_values: jax.Array, b_values: jax.Array) -> None:
         """First-apply backend measurement (tune="measure" only).
@@ -244,6 +316,11 @@ class ReuseExecutor:
             # measurement never donates: the sweep replays the same buffers
             self._measure(a_values, b_values)
         if donate:
+            if self.nan_guard:
+                raise ValueError(
+                    "nan_guard and donate are incompatible: the guard's "
+                    "oracle re-run reads the operand buffers after dispatch, "
+                    "which donation invalidates")
             key = {True: (True, True), "both": (True, True),
                    "a": (True, False), "b": (False, True)}.get(donate)
             if key is None:
@@ -252,8 +329,91 @@ class ReuseExecutor:
             fn = _apply_donated[key]
         else:
             fn = _apply
-        return fn(self.plan, a_values, b_values,
-                  backend=self.backend, interpret=self.interpret)
+        if self._guard is not None:
+            self._guard.check_values(a_values, b_values, self.validate_mode)
+        out = self._dispatch(fn, a_values, b_values)
+        if self.nan_guard:
+            out = self._nan_check(out, a_values, b_values)
+        return out
+
+    def _dispatch(self, fn, a_values, b_values):
+        """One replay dispatch under the degradation ladder + watchdog.
+
+        Failure catching lives HERE, outside jit: a trace that dies is never
+        cached, so re-dispatching ``backend="xla"`` compiles into its own
+        (clean) cache entry — the failed backend cannot poison it. All
+        counter bumps are eager host-side for the same reason.
+        """
+        backend = self.backend
+        if backend in ("pallas", "pallas_lp") and not f32_accumulation_ok(
+                a_values.dtype, b_values.dtype):
+            # the dtype guard inside _replay/lp_replay_values will route this
+            # dispatch to exact XLA; record the provenance eagerly
+            from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
+
+            FALLBACK_COUNTS["dtype:executor->xla"] += 1
+        try:
+            faults.check(f"kernel:{backend}")
+            out = self._timed(fn, a_values, b_values, backend)
+        except (SpgemmError, StragglerDetected):
+            # typed validation errors and watchdog deadline verdicts are not
+            # kernel failures — the ladder must not absorb either
+            raise
+        except Exception as e:
+            if self.on_kernel_failure == "raise" or backend == "xla":
+                raise KernelFallbackError(
+                    f"replay backend {backend!r} failed"
+                    + ("" if backend == "xla"
+                       else " and on_kernel_failure='raise'")) from e
+            from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
+
+            FALLBACK_COUNTS[f"fault:{backend}->xla"] += 1
+            self.kernel_source = "fallback"
+            out = self._timed(_apply, a_values, b_values, "xla")
+        if faults.armed("executor:poison_output") and jnp.issubdtype(
+                out.dtype, jnp.floating):
+            # chaos hook: simulate a kernel writing garbage (exercises the
+            # NaN guard's recovered path without a real miscompile)
+            out = out.at[:1].set(jnp.nan)
+        return out
+
+    def _timed(self, fn, a_values, b_values, backend):
+        """Run one dispatch, under the watchdog's deadline when one is set.
+
+        The watchdog measures wall time to *completed results*, so the
+        guarded path blocks on the output; unguarded dispatch keeps JAX's
+        async semantics untouched.
+        """
+        if self.watchdog is None:
+            return fn(self.plan, a_values, b_values,
+                      backend=backend, interpret=self.interpret)
+        with self.watchdog.step(DISPATCH_COUNTS["apply"]
+                                + DISPATCH_COUNTS["apply_batched"]):
+            out = fn(self.plan, a_values, b_values,
+                     backend=backend, interpret=self.interpret)
+            return jax.block_until_ready(out)
+
+    def _nan_check(self, out, a_values, b_values):
+        """Opt-in output guard: on non-finite output, re-run once through
+        the exact-XLA oracle (``numeric_reuse``) and classify — "recovered"
+        (kernel-side fault: oracle output finite, returned instead) vs
+        "data" (operands themselves carry NaN/Inf: flagged, oracle output
+        returned so the two verdicts are at least consistent)."""
+        if not jnp.issubdtype(out.dtype, jnp.floating):
+            return out
+        if bool(jnp.all(jnp.isfinite(out))):
+            return out
+        from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
+
+        FALLBACK_COUNTS["nan_guard:rerun"] += 1
+        oracle = numeric_reuse(self.plan, a_values, b_values)
+        if bool(jnp.all(jnp.isfinite(oracle))):
+            FALLBACK_COUNTS["nan_guard:recovered"] += 1
+            self.nan_events.append(("recovered", self.backend))
+            return oracle
+        FALLBACK_COUNTS["nan_guard:data"] += 1
+        self.nan_events.append(("data", self.backend))
+        return oracle
 
     def apply_batched(self, a_values: jax.Array, b_values: jax.Array) -> jax.Array:
         """Replay over stacked values in ONE dispatch: (batch, nnz_cap).
@@ -270,8 +430,17 @@ class ReuseExecutor:
                 "apply_batched needs at least one stacked (batch, nnz) operand; "
                 "use apply() for a single replay"
             )
-        return _apply_batched(self.plan, a_values, b_values,
-                              a_axis=a_axis, b_axis=b_axis)
+        if self._guard is not None:
+            self._guard.check_values(a_values, b_values, self.validate_mode,
+                                     batched=True)
+        if self.watchdog is None:
+            return _apply_batched(self.plan, a_values, b_values,
+                                  a_axis=a_axis, b_axis=b_axis)
+        with self.watchdog.step(DISPATCH_COUNTS["apply"]
+                                + DISPATCH_COUNTS["apply_batched"]):
+            out = _apply_batched(self.plan, a_values, b_values,
+                                 a_axis=a_axis, b_axis=b_axis)
+            return jax.block_until_ready(out)
 
     def to_csr(self, values: jax.Array) -> CSR:
         """Wrap one replay's values in the plan's C structure."""

@@ -544,11 +544,13 @@ def _repad_csr(a: CSR, nnz_cap: int) -> CSR:
     capacity, defeating the bucketing (the host driver syncs for the
     structure hash anyway, so the device->host copy is already paid).
     """
+    from repro.runtime.validate import CapacityOverflowError  # cycle-free
+
     if nnz_cap == a.nnz_cap:
         return a
     nnz = int(a.indptr[-1])
     if nnz > nnz_cap:
-        raise ValueError(
+        raise CapacityOverflowError(
             f"cannot repad CSR to nnz_cap={nnz_cap}: {nnz} live entries would "
             f"be truncated (buffer cap {a.nnz_cap})"
         )
@@ -642,7 +644,8 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
            pad_policy: str | None = None, plan_cache=None,
            tune: str | None = None,
            mesh=None, mesh_axis: str = "data",
-           b_placement: str = "replicated") -> SpgemmResult:
+           b_placement: str = "replicated",
+           validate: str | None = None) -> SpgemmResult:
     """Full two-phase SpGEMM with the KKSPGEMM meta-algorithm's method choice
     (see core/meta.py for the heuristics).
 
@@ -678,6 +681,16 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     cutoff, 'flat_lp' at or above); ``stats["lp_backend"]`` records which
     backend the lp method actually used ("pallas" or "xla").
 
+    validate: "off" (default via None) | "host" | "device" — typed operand
+        validation before any dispatch (``runtime/validate.py``): CSR
+        invariant violations raise ``SpgemmInputError``, a claimed nnz past
+        the buffer cap raises ``CapacityOverflowError``. "host" pulls the
+        structure to numpy and reports exact violation indices; "device"
+        runs one jitted bitmask sweep with a single scalar sync. ``None``
+        defers to ``$REPRO_VALIDATE``. "off" is bit-for-bit the pre-existing
+        dispatch path (no extra traces/hashes — telemetry-asserted in
+        tests/test_validate.py).
+
     tune="measure" (sparse/auto-sparse only) switches the replay dispatch to
     the autotuner: on first sight of a structure-stats bucket the eligible
     replay backends are micro-benchmarked on the real operands and the
@@ -693,12 +706,18 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     from repro.core.meta import choose_kernel, choose_method  # cycle-free
     from repro.core.plan_cache import default_plan_cache
 
+    from repro.runtime.validate import check_csr, resolve_mode  # cycle-free
+
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
     if method not in ("auto", "dense", "sparse", "lp"):
         raise ValueError(
             f"unknown method {method!r}; expected 'auto', 'dense', 'sparse' "
             f"or 'lp'")
     autotune.validate_tune(tune)
+    vmode = resolve_mode(validate)
+    if vmode != "off":
+        check_csr(a, vmode, name="A")
+        check_csr(b, vmode, name="B")
     if tune == "measure" and method == "lp":
         raise ValueError(
             "tune='measure' does not compose with method='lp': 'lp' pins "
@@ -725,7 +744,7 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         return sharded_spgemm(a, b, mesh, axis=mesh_axis,
                               b_placement=b_placement, pad_policy=policy,
                               plan_cache=plan_cache)
-    stats: dict = {"pad_policy": policy}
+    stats: dict = {"pad_policy": policy, "validate": vmode}
     if method == "auto":
         method = choose_method(a, b, stats)  # shape-only heuristics
     stats["method"] = method
@@ -761,10 +780,17 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     stats["kernel"] = choose_kernel(a, b, stats)  # the paper's GPU rule
 
     plan, cache_state, skey = resolve_plan(a, b, fm_cap, policy, cache)
+    stats["structure_key"] = skey
     if method == "lp":
         values, stats["lp_backend"] = lp_replay_values(
             plan, a.values, b.values)
         stats["replay_backend"] = stats["lp_backend"]
+        if stats["lp_backend"] == "xla":
+            # host-side bump (trace-time bumps are unreliable): the f32-
+            # accumulation dtype guard rerouted the LP pin to exact XLA
+            from repro.core.telemetry import FALLBACK_COUNTS
+
+            FALLBACK_COUNTS["dtype:lp->xla"] += 1
     elif tune == "measure":
         values, winner = _measured_replay(plan, a, b, cache, skey)
         stats["replay_backend"] = winner

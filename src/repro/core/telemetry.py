@@ -22,6 +22,23 @@ from repro.core.plan_cache import HASH_COUNTS, reset_hash_counts
 from repro.core.spgemm import TRACE_COUNTS, reset_trace_counts
 from repro.kernels.ops import KERNEL_COUNTS, reset_kernel_counts
 
+# Degradation-ladder / guard events (PR 7). Lives here (not in a dispatch
+# module) because three subsystems bump it — kernels.ops ladder steps,
+# executor fault fallbacks, the NaN guard — and they all import telemetry
+# lazily inside functions (this module imports them at module level).
+# Key conventions:
+#   "fault:<kernel>-><next>"   ladder step after a kernel exception
+#   "dtype:<site>->xla"        f32-accumulation guard rerouted to XLA
+#   "nan_guard:rerun"          guard saw non-finite output, reran oracle
+#   "nan_guard:recovered"      oracle rerun was finite (kernel-side fault)
+#   "nan_guard:data"           oracle rerun still non-finite (operand NaN)
+FALLBACK_COUNTS: Counter = Counter()
+
+
+def reset_fallback_counts() -> None:
+    FALLBACK_COUNTS.clear()
+
+
 # name -> live Counter object (shared with the owning module, not copies)
 ALL_COUNTERS: dict[str, Counter] = {
     "trace": TRACE_COUNTS,
@@ -29,6 +46,7 @@ ALL_COUNTERS: dict[str, Counter] = {
     "dispatch": DISPATCH_COUNTS,
     "kernel": KERNEL_COUNTS,
     "tune": TUNE_COUNTS,
+    "fallback": FALLBACK_COUNTS,
 }
 
 _RESETS = (
@@ -37,6 +55,7 @@ _RESETS = (
     reset_dispatch_counts,
     reset_kernel_counts,
     reset_tune_counts,
+    reset_fallback_counts,
 )
 
 

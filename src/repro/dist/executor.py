@@ -47,6 +47,8 @@ from repro.core.spgemm import (
 )
 from repro.dist.plan import B_PLACEMENTS, ShardedPlan, build_sharded_plan
 from repro.dist.plan_cache import default_dist_plan_cache, dist_plan_key
+from repro.runtime.validate import (PlanMismatchError, SpgemmInputError,
+                                    check_csr, resolve_mode)
 from repro.sparse.formats import CSR
 
 
@@ -134,7 +136,8 @@ class ShardedReuseExecutor:
     """
 
     def __init__(self, plan: ShardedPlan, mesh, *, axis: str = "data",
-                 b_placement: str = "replicated"):
+                 b_placement: str = "replicated",
+                 validate: str | None = "off"):
         if b_placement not in B_PLACEMENTS:
             raise ValueError(
                 f"unknown b_placement {b_placement!r}; expected one of "
@@ -149,12 +152,66 @@ class ShardedReuseExecutor:
         self.b_placement = b_placement
         self.cache_state = "pinned"
         self._merge_perm = None  # built lazily by merge_values
+        # validate= mirrors ReuseExecutor: a literal "off" default (the
+        # replay hot path must not silently change under $REPRO_VALIDATE);
+        # pin-time syncs of two scalars buy O(1) per-replay operand checks
+        self.validate_mode = resolve_mode(validate)
+        self._a_req = self._b_req = 0
+        if self.validate_mode != "off":
+            # operand requirements over LIVE products only (padding slots
+            # are clamped to build-time caps and dropped by sentinel
+            # seg_ids — see runtime.validate.PlanGuard): trace each live
+            # product's slot back through the pinned routing perms to the
+            # global value slot it actually reads
+            seg = np.asarray(plan.seg_ids)  # (S, fm_cap)
+            live = seg < plan.nnz_cap
+            asl = np.asarray(plan.a_slot_s)
+            bsl = np.asarray(plan.b_slot_s)
+            aperm = np.asarray(plan.a_perm)  # (S, a_cap): local -> global
+            ga = np.take_along_axis(
+                aperm, np.minimum(asl, aperm.shape[1] - 1), axis=1)
+            self._a_req = int(ga[live].max()) + 1 if live.any() else 0
+            if b_placement == "replicated":
+                # replicated replay gathers global B values via b_slot_s
+                gb = bsl[live]
+            else:
+                # concat slot -> gathered flat slot -> global value slot
+                bperm = np.asarray(plan.b_perm)
+                flatshard = np.asarray(plan.b_shard_perm).reshape(-1)
+                gb = flatshard[bperm[np.minimum(bsl[live],
+                                                len(bperm) - 1)]]
+            self._b_req = int(gb.max()) + 1 if gb.size else 0
+
+    def _check_values(self, a_values, b_values, batched: bool) -> None:
+        """Per-replay operand check (validate != "off"): global value-buffer
+        lengths against the pinned routing perms (``PlanMismatchError``),
+        plus a device finiteness sweep in "device" mode."""
+        for side, vals, req in (("A", a_values, self._a_req),
+                                ("B", b_values, self._b_req)):
+            ok_ndim = vals.ndim in (1, 2) if batched else vals.ndim == 1
+            if not ok_ndim:
+                raise PlanMismatchError(
+                    f"{side} values must be "
+                    f"{'(batch, nnz) or (nnz,)' if batched else '1-D (nnz,)'}"
+                    f" in the flat global layout, got shape "
+                    f"{tuple(vals.shape)}")
+            if vals.shape[-1] < req:
+                raise PlanMismatchError(
+                    f"{side} value buffer has {vals.shape[-1]} slots but the "
+                    f"pinned sharded plan routes up to slot {req - 1} — "
+                    f"replaying against operands from a different structure?")
+            if (self.validate_mode == "device"
+                    and jnp.issubdtype(vals.dtype, jnp.floating)
+                    and not bool(jnp.all(jnp.isfinite(vals)))):
+                raise SpgemmInputError(
+                    f"{side} values contain NaN/Inf (device validation)")
 
     @classmethod
     def from_matrices(cls, a: CSR, b: CSR, mesh, *, axis: str = "data",
                       b_placement: str = "replicated",
                       pad_policy: str | None = None,
-                      plan_cache=None, _prepared=None) -> "ShardedReuseExecutor":
+                      plan_cache=None, validate: str | None = "off",
+                      _prepared=None) -> "ShardedReuseExecutor":
         """Build (or fetch from the mesh-aware plan cache) the sharded plan
         for ``a @ b`` and pin it. One structure hash, ever; a cache hit
         skips partitioning, the sharded symbolic pass, and the plan build —
@@ -166,6 +223,10 @@ class ShardedReuseExecutor:
         way — replays take fresh values as arguments.
         """
         policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+        vmode = resolve_mode(validate)
+        if vmode != "off":
+            check_csr(a, vmode, name="A")
+            check_csr(b, vmode, name="B")
         if _prepared is None:
             _prepared = prepare_sparse_inputs(a, b, policy)
         a, b, _, _, fm_cap = _prepared
@@ -188,7 +249,8 @@ class ShardedReuseExecutor:
                 state = "miss"
             else:
                 state = "bypass"
-        ex = cls(plan, mesh, axis=axis, b_placement=b_placement)
+        ex = cls(plan, mesh, axis=axis, b_placement=b_placement,
+                 validate=vmode)
         ex.cache_state = state
         return ex
 
@@ -225,6 +287,8 @@ class ShardedReuseExecutor:
         serving loop can switch meshes without reshaping its buffers.
         """
         DISPATCH_COUNTS["dist_apply"] += 1
+        if self.validate_mode != "off":
+            self._check_values(a_values, b_values, batched=False)
         return self._replay(a_values, b_values, None, None)
 
     def apply_batched(self, a_values: jax.Array,
@@ -241,6 +305,8 @@ class ShardedReuseExecutor:
             raise ValueError(
                 "apply_batched needs at least one stacked (batch, nnz) "
                 "operand; use apply() for a single replay")
+        if self.validate_mode != "off":
+            self._check_values(a_values, b_values, batched=True)
         return self._replay(a_values, b_values, a_axis, b_axis)
 
     def to_sharded_csr(self, values: jax.Array) -> ShardedCSR:

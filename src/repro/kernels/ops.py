@@ -109,7 +109,8 @@ def symbolic_rowsizes(a: CSR, b: CSR, *, pad_policy: str | None = None) -> jax.A
 def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
                    pad_policy: str | None = None, kernel: str = "auto",
                    fm: int | None = None,
-                   tune: str | None = None) -> jax.Array:
+                   tune: str | None = None,
+                   on_kernel_failure: str = "fallback") -> jax.Array:
     """Kernel-backed numeric phase: ELL-layout values of C at the symbolic
     structure ``c_idx``/``c_nnz`` (the Reuse entry point). Widths bucketed.
 
@@ -125,8 +126,18 @@ def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
     operands, the winner runs and is recorded in the autotuner's bucket
     table — later same-bucket calls (through here *or* through
     ``resolve_numeric_kernel``) dispatch it with zero re-tuning.
+
+    on_kernel_failure: "fallback" (default) walks the degradation ladder on
+    any kernel exception — measured/resolved pick, then the static
+    ``choose_kernel`` pick (auto modes only), then the exact-XLA reference —
+    recording each step in ``telemetry.FALLBACK_COUNTS`` as
+    ``"fault:<failed>-><next>"``; "raise" converts the first failure into a
+    typed ``KernelFallbackError``. The ladder catches *outside* jit, so a
+    failed trace is never cached and the fallback compiles cleanly.
     """
     from repro.core import autotune  # lazy: avoid kernels<->core cycle
+    from repro.runtime import faults  # lazy: keep kernels import-light
+    from repro.runtime.validate import KernelFallbackError, SpgemmError
 
     autotune.validate_tune(tune)
     if tune == "measure" and kernel != "auto":
@@ -134,10 +145,15 @@ def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
             f"tune='measure' requires kernel='auto' (got kernel={kernel!r}):"
             f" measure mode picks the kernel empirically, an explicit pin "
             f"contradicts it")
+    if on_kernel_failure not in ("fallback", "raise"):
+        raise ValueError(
+            f"on_kernel_failure must be 'fallback' or 'raise', got "
+            f"{on_kernel_failure!r}")
     ea = csr_to_ell(a)
     eb = csr_to_ell(b)
 
     def run(kname: str) -> jax.Array:
+        faults.check(f"kernel:{kname}")
         if kname == "xla":
             return ref.spgemm_numeric_ref(
                 ea.indices, ea.values, eb.indices, eb.values, c_idx, c_nnz,
@@ -154,9 +170,11 @@ def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
             interpret=_interpret(),
         )
 
+    # the auto paths need fm anyway (selection rule / bucket key); computing
+    # it up front also prices the ladder's static rung at zero extra passes
+    if kernel == "auto" and fm is None:
+        fm = int(flops_stats(a, b.row_nnz())[0])
     if tune == "measure":
-        if fm is None:
-            fm = int(flops_stats(a, b.row_nnz())[0])
         bkey = autotune.bucket_key(a.m, b.k, fm, a.values.dtype,
                                    b.values.dtype, table="numeric")
         resolved = autotune.lookup_measured(bkey)
@@ -169,8 +187,42 @@ def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
             resolved, _ = autotune.measure_and_record(bkey, cands)
     else:
         resolved = resolve_numeric_kernel(a, b, kernel, fm=fm)
-    KERNEL_COUNTS[resolved] += 1
-    return run(resolved)
+        if (kernel == "auto" and resolved == "xla"
+                and not f32_accumulation_ok(a.values.dtype, b.values.dtype)):
+            from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
+
+            FALLBACK_COUNTS["dtype:numeric_auto->xla"] += 1
+
+    # degradation ladder: resolved/measured pick -> static choose_kernel
+    # pick (auto modes only) -> exact-XLA reference, deduplicated in order
+    ladder = [resolved]
+    if kernel == "auto" or tune == "measure":
+        static_pick = choose_kernel(a, b, {"fm": fm})
+        if static_pick not in ladder:
+            ladder.append(static_pick)
+    if "xla" not in ladder:
+        ladder.append("xla")
+
+    for i, kname in enumerate(ladder):
+        try:
+            out = run(kname)
+        except SpgemmError:
+            raise  # typed validation errors are not kernel failures
+        except Exception as e:
+            if on_kernel_failure == "raise":
+                raise KernelFallbackError(
+                    f"numeric kernel {kname!r} failed and "
+                    f"on_kernel_failure='raise'") from e
+            if i + 1 >= len(ladder):
+                raise KernelFallbackError(
+                    "numeric kernel ladder exhausted "
+                    f"({' -> '.join(ladder)})") from e
+            from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
+
+            FALLBACK_COUNTS[f"fault:{kname}->{ladder[i + 1]}"] += 1
+            continue
+        KERNEL_COUNTS[kname] += 1
+        return out
 
 
 def pallas_spgemm(a: CSR, b: CSR, *,

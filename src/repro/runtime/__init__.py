@@ -1,3 +1,39 @@
-from repro.runtime.watchdog import Heartbeat, StepWatchdog
+"""repro.runtime — host-side robustness layer for the execution stack.
 
-__all__ = ["StepWatchdog", "Heartbeat"]
+validate: typed error taxonomy + opt-in CSR/plan validation modes.
+faults:   deterministic fault injection (data faults + kernel failpoints).
+retry:    bounded jittered backoff with typed give-up.
+watchdog: liveness heartbeat + per-step/per-replay straggler deadlines.
+"""
+from repro.runtime.faults import (FAULTS, FaultSpec, InjectedFault, failpoint,
+                                  inject_csr, reset_failpoints)
+from repro.runtime.retry import RetryExhaustedError, backoff_schedule, retry_call
+from repro.runtime.validate import (VALIDATE_MODES, CapacityOverflowError,
+                                    KernelFallbackError, PlanGuard,
+                                    PlanMismatchError, SpgemmError,
+                                    SpgemmInputError, check_csr, resolve_mode)
+from repro.runtime.watchdog import Heartbeat, StepWatchdog, StragglerDetected
+
+__all__ = [
+    "StepWatchdog",
+    "Heartbeat",
+    "StragglerDetected",
+    "SpgemmError",
+    "SpgemmInputError",
+    "PlanMismatchError",
+    "CapacityOverflowError",
+    "KernelFallbackError",
+    "RetryExhaustedError",
+    "InjectedFault",
+    "FaultSpec",
+    "FAULTS",
+    "PlanGuard",
+    "VALIDATE_MODES",
+    "check_csr",
+    "resolve_mode",
+    "failpoint",
+    "inject_csr",
+    "reset_failpoints",
+    "retry_call",
+    "backoff_schedule",
+]

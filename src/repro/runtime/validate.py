@@ -1,0 +1,297 @@
+"""Typed validation layer for the SpGEMM execution stack.
+
+The meta-algorithm's dispatch surface (dense_acc / flat_lp / segsum / XLA
+fallback, static < fitted < measured precedence) means a corrupted operand or
+a plan replayed against the wrong structure can fail far from its cause — as
+garbage values or a cryptic XLA shape error deep inside a jitted replay.
+This module converts those failure modes into a *typed* taxonomy raised at
+the entry point that received the bad input:
+
+  ``SpgemmInputError``     — a CSR operand violates its invariants
+                             (non-monotone ``indptr``, out-of-bounds column
+                             indices, non-finite values, mismatched array
+                             lengths, negative shape).
+  ``CapacityOverflowError`` — a static bucketed capacity is exceeded
+                             (``indptr[-1] > nnz_cap``, repad truncation).
+  ``PlanMismatchError``    — a pinned plan replayed against incompatible
+                             operands (wrong value-buffer lengths, or a
+                             structure-key recheck that no longer matches).
+  ``KernelFallbackError``  — a kernel failed and the degradation ladder was
+                             told to raise (or ran out of rungs): the typed
+                             give-up of ``kernels/ops.py`` /
+                             ``core/executor.py``.
+
+All taxonomy classes subclass ``SpgemmError`` and ``ValueError`` /
+``RuntimeError`` as appropriate, so pre-taxonomy ``except ValueError``
+call sites keep working.
+
+Validation modes (``spgemm(validate=...)``, ``ReuseExecutor.pin/apply``,
+``ShardedReuseExecutor``):
+
+  "off"    — the default: zero added work, dispatch-identical to the
+             unvalidated path (no extra retraces, hashes, or host syncs).
+  "host"   — pull operand structure to the host and check every invariant
+             with exact indices in the error message. O(nnz) host work per
+             validated call; the thorough mode for debugging and chaos CI.
+  "device" — one jitted reduction computes a violation bitmask on device and
+             a single scalar sync brings back the verdict. O(nnz) device
+             work, O(1) host transfer; the mode for big operands where a
+             host pull would dominate.
+
+``validate=None`` resolves through the ``REPRO_VALIDATE`` environment
+variable (chaos CI forces ``REPRO_VALIDATE=host``), else "off".
+``benchmarks.run --bench guard`` measures the per-mode overhead so it is
+reported, not hidden.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VALIDATE_MODES = ("off", "host", "device")
+
+# Environment override consulted when a caller passes validate=None: chaos CI
+# sets REPRO_VALIDATE=host to force validation across a whole test run
+# without touching call sites.
+VALIDATE_ENV_VAR = "REPRO_VALIDATE"
+
+
+class SpgemmError(Exception):
+    """Base of the typed SpGEMM failure taxonomy."""
+
+
+class SpgemmInputError(SpgemmError, ValueError):
+    """A CSR operand violates its structural or numeric invariants."""
+
+
+class CapacityOverflowError(SpgemmError, ValueError):
+    """A static bucketed capacity (nnz_cap / fm_cap) was exceeded."""
+
+
+class PlanMismatchError(SpgemmError, ValueError):
+    """A pinned plan was replayed against incompatible operands."""
+
+
+class KernelFallbackError(SpgemmError, RuntimeError):
+    """A kernel failed and the degradation ladder gave up (or was told to
+    raise instead of degrading). ``__cause__`` carries the original error."""
+
+
+def resolve_mode(mode: str | None) -> str:
+    """Normalize a ``validate=`` argument to a concrete mode.
+
+    ``None`` defers to ``$REPRO_VALIDATE`` (else "off"); anything outside
+    ``VALIDATE_MODES`` is a loud ``ValueError`` — a typo'd mode silently
+    validating nothing would defeat the whole layer.
+    """
+    if mode is None:
+        mode = os.environ.get(VALIDATE_ENV_VAR, "off") or "off"
+    if mode not in VALIDATE_MODES:
+        raise ValueError(
+            f"unknown validate mode {mode!r}; expected one of "
+            f"{VALIDATE_MODES}")
+    return mode
+
+
+# --------------------------------------------------------------------------
+# CSR invariant checks
+# --------------------------------------------------------------------------
+
+# Violation bits shared by the host and device checkers, so both modes raise
+# identical typed errors for identical corruptions.
+_BIT_INDPTR = 1  # indptr[0] != 0, negative row size, or negative nnz
+_BIT_OVERFLOW = 2  # indptr[-1] > nnz_cap
+_BIT_COL_OOB = 4  # live column index outside [0, k)
+_BIT_NONFINITE = 8  # live value is NaN or +/-Inf
+
+
+@partial(jax.jit, static_argnames=("k", "check_finite"))
+def _csr_flags_device(indptr, indices, values, k: int, check_finite: bool):
+    """Device-side invariant sweep -> int32 violation bitmask (one scalar).
+
+    Shapes are already capacity-bucketed by the callers, so this compiles
+    once per bucket like every other jitted stage.
+    """
+    nnz_cap = indices.shape[0]
+    nnz = indptr[-1]
+    d = indptr[1:] - indptr[:-1]
+    bad_indptr = (indptr[0] != 0) | jnp.any(d < 0) | (nnz < 0)
+    overflow = nnz > nnz_cap
+    live = jnp.arange(nnz_cap, dtype=jnp.int32) < jnp.clip(nnz, 0, nnz_cap)
+    col_oob = jnp.any(live & ((indices < 0) | (indices >= k)))
+    flags = (bad_indptr.astype(jnp.int32) * _BIT_INDPTR
+             | overflow.astype(jnp.int32) * _BIT_OVERFLOW
+             | col_oob.astype(jnp.int32) * _BIT_COL_OOB)
+    if check_finite:
+        nonfinite = jnp.any(live & ~jnp.isfinite(values))
+        flags = flags | nonfinite.astype(jnp.int32) * _BIT_NONFINITE
+    return flags
+
+
+def _raise_for_flags(flags: int, name: str, mat) -> None:
+    if flags & _BIT_INDPTR:
+        raise SpgemmInputError(
+            f"{name}: corrupted indptr (must start at 0 and be "
+            f"non-decreasing; m={mat.m}, nnz_cap={mat.nnz_cap})")
+    if flags & _BIT_OVERFLOW:
+        raise CapacityOverflowError(
+            f"{name}: indptr[-1] exceeds the nnz capacity "
+            f"{mat.nnz_cap} — the bucketed value buffer would overflow")
+    if flags & _BIT_COL_OOB:
+        raise SpgemmInputError(
+            f"{name}: live column index outside [0, {mat.k})")
+    if flags & _BIT_NONFINITE:
+        raise SpgemmInputError(f"{name}: live value is NaN or Inf")
+
+
+def check_csr(mat, mode: str = "host", name: str = "operand"):
+    """Validate a CSR operand under ``mode``; returns ``mat`` unchanged.
+
+    Metadata checks (shape sanity, array-length agreement) run on the host
+    in both modes — they read static shapes only. Content checks (indptr
+    monotonicity, column bounds, value finiteness) run per the mode. Raises
+    ``SpgemmInputError`` / ``CapacityOverflowError``; mode "off" is a no-op.
+    """
+    mode = resolve_mode(mode)
+    if mode == "off":
+        return mat
+    shape = tuple(mat.shape)
+    if len(shape) != 2 or any(int(s) < 0 for s in shape):
+        raise SpgemmInputError(
+            f"{name}: shape must be a non-negative (m, k) pair, got {shape}")
+    m, k = (int(s) for s in shape)
+    if mat.indptr.shape[0] != m + 1:
+        raise SpgemmInputError(
+            f"{name}: len(indptr) == {mat.indptr.shape[0]} but shape[0]+1 "
+            f"== {m + 1}")
+    if mat.indices.shape[0] != mat.values.shape[0]:
+        raise SpgemmInputError(
+            f"{name}: len(indices) == {mat.indices.shape[0]} != "
+            f"len(values) == {mat.values.shape[0]}")
+    check_finite = bool(jnp.issubdtype(jnp.asarray(mat.values).dtype,
+                                       jnp.floating))
+    if mode == "device":
+        flags = int(_csr_flags_device(mat.indptr, mat.indices, mat.values,
+                                      k=k, check_finite=check_finite))
+        _raise_for_flags(flags, name, mat)
+        return mat
+    # host mode: numpy pulls, exact first-violation indices in the message
+    ip = np.asarray(mat.indptr)
+    if int(ip[0]) != 0:
+        raise SpgemmInputError(f"{name}: indptr[0] == {int(ip[0])}, want 0")
+    d = np.diff(ip)
+    bad = np.nonzero(d < 0)[0]
+    if bad.size:
+        i = int(bad[0])
+        raise SpgemmInputError(
+            f"{name}: indptr not monotone at row {i} "
+            f"({int(ip[i])} -> {int(ip[i + 1])})")
+    nnz = int(ip[-1])
+    if nnz > mat.nnz_cap:
+        raise CapacityOverflowError(
+            f"{name}: indptr[-1] == {nnz} exceeds nnz_cap == {mat.nnz_cap}")
+    idx = np.asarray(mat.indices)[:nnz]
+    bad = np.nonzero((idx < 0) | (idx >= k))[0]
+    if bad.size:
+        i = int(bad[0])
+        raise SpgemmInputError(
+            f"{name}: column index {int(idx[i])} at slot {i} outside "
+            f"[0, {k})")
+    if check_finite:
+        vals = np.asarray(mat.values)[:nnz]
+        bad = np.nonzero(~np.isfinite(vals))[0]
+        if bad.size:
+            raise SpgemmInputError(
+                f"{name}: non-finite value at slot {int(bad[0])} "
+                f"({vals[int(bad[0])]!r})")
+    return mat
+
+
+# --------------------------------------------------------------------------
+# Plan <-> operand compatibility (replay-time checks)
+# --------------------------------------------------------------------------
+
+
+class PlanGuard:
+    """Pin-time digest of a plan's operand requirements.
+
+    Built once when an executor pins a plan with validation on (one
+    device->host sync of two scalars), so every subsequent ``apply`` pays
+    only O(1) host comparisons — the validated replay path must not add
+    per-call device syncs or rehashes.
+    """
+
+    def __init__(self, plan):
+        self.nnz_cap = int(plan.indices.shape[0])
+        # operand requirements come from LIVE products only: padding slots
+        # were clamped to the build-time bucketed cap at expansion (their
+        # sentinel seg_ids drop them from the scatter), so counting them
+        # would reject legitimate replays with unrepadded value buffers
+        seg = np.asarray(plan.seg_ids)
+        live = seg < self.nnz_cap
+        asl = np.asarray(plan.a_slot_s)[live]
+        bsl = np.asarray(plan.b_slot_s)[live]
+        self.a_req = int(asl.max()) + 1 if asl.size else 0
+        self.b_req = int(bsl.max()) + 1 if bsl.size else 0
+        ip = np.asarray(plan.indptr)
+        if int(ip[0]) != 0 or np.any(np.diff(ip) < 0):
+            raise SpgemmInputError(
+                "plan: corrupted indptr (must start at 0 and be "
+                "non-decreasing) — refusing to pin")
+        if int(ip[-1]) > self.nnz_cap:
+            raise CapacityOverflowError(
+                f"plan: indptr[-1] == {int(ip[-1])} exceeds the plan's "
+                f"nnz_cap == {self.nnz_cap}")
+
+    def _check_one(self, values, req: int, side: str, mode: str,
+                   batched: bool) -> None:
+        want_ndim = values.ndim in (1, 2) if batched else values.ndim == 1
+        if not want_ndim:
+            raise PlanMismatchError(
+                f"{side} values must be "
+                f"{'(batch, nnz) or (nnz,)' if batched else '1-D (nnz,)'}, "
+                f"got shape {tuple(values.shape)}")
+        if values.shape[-1] < req:
+            raise PlanMismatchError(
+                f"{side} value buffer has {values.shape[-1]} slots but the "
+                f"pinned plan gathers up to slot {req - 1} — replaying a "
+                f"plan against operands from a different structure?")
+        if mode == "device" and jnp.issubdtype(values.dtype, jnp.floating):
+            if not bool(jnp.all(jnp.isfinite(values))):
+                raise SpgemmInputError(
+                    f"{side} values contain NaN/Inf (device validation)")
+
+    def check_values(self, a_values, b_values, mode: str,
+                     batched: bool = False) -> None:
+        """Replay-time operand check: shapes/lengths against the pinned
+        requirements (``PlanMismatchError``), plus a device finiteness sweep
+        in "device" mode (``SpgemmInputError``)."""
+        self._check_one(a_values, self.a_req, "A", mode, batched)
+        self._check_one(b_values, self.b_req, "B", mode, batched)
+
+
+def check_plan_compat(pinned_key: str | None, a, b, fm_cap: int,
+                      pad_policy: str) -> None:
+    """Full structure-key recheck: do these operands still hash to the plan?
+
+    Used by ``ReuseExecutor.check_compat`` when the caller holds the CSR
+    operands (not just value buffers). Costs one ``structure_key`` digest —
+    opt-in, and the HASH_COUNTS bump is the documented price.
+    """
+    from repro.core.plan_cache import structure_key  # cycle-free late import
+
+    if pinned_key is None:
+        raise PlanMismatchError(
+            "this executor has no pinned structure key (constructed from a "
+            "bare plan); build it with ReuseExecutor.pin/from_matrices to "
+            "enable the structure-key recheck")
+    key = structure_key(a, b, fm_cap, pad_policy)
+    if key != pinned_key:
+        raise PlanMismatchError(
+            f"operand structure key {key[:12]}... does not match the pinned "
+            f"plan's {pinned_key[:12]}... — the plan would replay against a "
+            f"different sparsity structure")

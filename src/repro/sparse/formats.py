@@ -98,13 +98,39 @@ class CSR:
         )
 
     @staticmethod
-    def from_arrays(indptr, indices, values, shape) -> "CSR":
-        return CSR(
+    def from_arrays(indptr, indices, values, shape, validate: bool = True) -> "CSR":
+        """Wrap pre-built arrays as a CSR.
+
+        ``validate=True`` (the default) runs cheap host-side shape checks —
+        array-length agreement and shape sanity only, never an O(nnz)
+        content scan — raising ``SpgemmInputError``. Jitted callers and
+        deliberate bad-CSR construction (fault injection) pass
+        ``validate=False``; content invariants are the job of
+        ``runtime.validate.check_csr`` / ``spgemm(validate=...)``.
+        """
+        mat = CSR(
             indptr=jnp.asarray(indptr, jnp.int32),
             indices=jnp.asarray(indices, jnp.int32),
             values=jnp.asarray(values),
             shape=tuple(shape),
         )
+        if validate:
+            # lazy import: formats is a leaf module the runtime layer reads
+            from repro.runtime.validate import SpgemmInputError
+
+            shape = mat.shape
+            if len(shape) != 2 or any(int(s) < 0 for s in shape):
+                raise SpgemmInputError(
+                    f"shape must be a non-negative (m, k) pair, got {shape}")
+            if mat.indptr.shape[0] != shape[0] + 1:
+                raise SpgemmInputError(
+                    f"len(indptr) == {mat.indptr.shape[0]} but shape[0]+1 "
+                    f"== {shape[0] + 1}")
+            if mat.indices.shape[0] != mat.values.shape[0]:
+                raise SpgemmInputError(
+                    f"len(indices) == {mat.indices.shape[0]} != "
+                    f"len(values) == {mat.values.shape[0]}")
+        return mat
 
 
 @partial(

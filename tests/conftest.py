@@ -37,10 +37,13 @@ def _reset_telemetry():
     and no fitted table / measured winner leaks across tests (the tuner
     registries are process-global). Lazy imports keep collection cheap."""
     from repro.core import autotune, telemetry
+    from repro.runtime import faults
 
     telemetry.reset_all()
     autotune.reset_tuner()
+    faults.reset_failpoints()
     yield
+    faults.reset_failpoints()  # an armed failpoint must never leak forward
 
 
 @pytest.fixture(autouse=True, scope="module")

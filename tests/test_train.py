@@ -5,6 +5,7 @@ import os
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.ckpt import latest_step, restore, save
 from repro.configs import get_config
@@ -142,3 +143,71 @@ def test_watchdog():
         raise AssertionError("should have raised")
     except StragglerDetected:
         pass
+
+
+def test_watchdog_records_raising_step():
+    # regression: the yield used to be unwrapped, so a step body that raised
+    # was never timed or recorded — slow failing steps vanished from telemetry
+    import time
+
+    from repro.runtime import StepWatchdog
+
+    wd = StepWatchdog(deadline_s=0.01, policy="warn")
+    with pytest.raises(RuntimeError, match="body failed"):
+        with wd.step(3):
+            time.sleep(0.02)
+            raise RuntimeError("body failed")
+    assert wd.slow_steps and wd.slow_steps[0][0] == 3
+
+
+def test_watchdog_raise_policy_does_not_mask_body_exception():
+    # a slow step whose body ALSO raised must propagate the body's error,
+    # not replace it with StragglerDetected (the slow step is still recorded)
+    import time
+
+    from repro.runtime import StepWatchdog
+
+    wd = StepWatchdog(deadline_s=0.01, policy="raise")
+    with pytest.raises(RuntimeError, match="body failed"):
+        with wd.step(4):
+            time.sleep(0.02)
+            raise RuntimeError("body failed")
+    assert wd.slow_steps and wd.slow_steps[0][0] == 4
+
+
+def test_watchdog_uses_monotonic_clock(monkeypatch):
+    # wall-clock jumps (NTP slew) must not fire the deadline: freeze
+    # time.time far in the future and verify the watchdog ignores it
+    import time as _time
+
+    from repro.runtime import StepWatchdog
+
+    wd = StepWatchdog(deadline_s=10.0, policy="raise")
+    monkeypatch.setattr(_time, "time", lambda: _time.monotonic() + 10_000.0)
+    with wd.step(0):
+        pass
+    assert wd.slow_steps == []
+
+
+def test_heartbeat_survives_write_errors(tmp_path):
+    # regression: an OSError on the liveness write used to kill the daemon
+    # thread silently — the beat must continue and the error be counted
+    import os
+    import time
+
+    from repro.runtime import Heartbeat
+
+    target_dir = tmp_path / "gone"
+    target_dir.mkdir()
+    hb = Heartbeat(str(target_dir / "live.json"), interval_s=0.01)
+    hb.start()
+    try:
+        time.sleep(0.05)
+        assert os.path.exists(hb.path)
+        os.remove(hb.path)
+        target_dir.rmdir()  # unlink the dir: every write now OSErrors
+        time.sleep(0.05)
+        assert hb._thread.is_alive()  # daemon kept beating through failures
+    finally:
+        errors = hb.stop()
+    assert errors >= 1 and hb.write_errors == errors

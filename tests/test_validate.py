@@ -1,0 +1,294 @@
+"""Validation layer + retry/watchdog wiring + fallback-provenance tests.
+
+Covers: typed CSR construction checks, resolve_mode/$REPRO_VALIDATE, the
+validate="off" dispatch-identity guarantee (telemetry-asserted), the
+f64/int XLA-fallback provenance agreement across all three entry points,
+retry_call determinism, and the watchdog-guarded replay path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import telemetry
+from repro.core.executor import ReuseExecutor
+from repro.core.spgemm import spgemm
+from repro.kernels.ops import numeric_values
+from repro.runtime.retry import RetryExhaustedError, backoff_schedule, retry_call
+from repro.runtime.validate import (VALIDATE_MODES, PlanMismatchError,
+                                    SpgemmInputError, resolve_mode)
+from repro.runtime.watchdog import StepWatchdog, StragglerDetected
+from repro.sparse import csr_to_ell, random_csr
+from repro.sparse.formats import CSR
+
+
+@pytest.fixture
+def ab():
+    return random_csr(32, 24, 4.0, seed=1), random_csr(24, 40, 4.0, seed=2)
+
+
+# --------------------------------------------------------------------------
+# CSR.from_arrays host-side checks (satellite c)
+# --------------------------------------------------------------------------
+
+
+def test_from_arrays_rejects_short_indptr():
+    with pytest.raises(SpgemmInputError, match="indptr"):
+        CSR.from_arrays([0, 1], [0], [1.0], (4, 4))
+
+
+def test_from_arrays_rejects_length_mismatch():
+    with pytest.raises(SpgemmInputError, match="len\\(indices\\)"):
+        CSR.from_arrays([0, 1, 2], [0, 1], [1.0], (2, 4))
+
+
+def test_from_arrays_rejects_bad_shape():
+    with pytest.raises(SpgemmInputError, match="shape"):
+        CSR.from_arrays([0, 1], [0], [1.0], (1, -4))
+    with pytest.raises(SpgemmInputError, match="shape"):
+        CSR.from_arrays([0, 1], [0], [1.0], (1, 2, 3))
+
+
+def test_from_arrays_escape_hatch():
+    # fault injection and jitted callers build bad CSRs on purpose
+    bad = CSR.from_arrays([0, 1], [0], [1.0, 2.0], (1, 4), validate=False)
+    assert bad.indices.shape[0] != bad.values.shape[0]
+
+
+def test_from_arrays_accepts_valid():
+    m = CSR.from_arrays([0, 2, 3], [1, 3, 0], [1.0, 2.0, 3.0], (2, 4))
+    assert m.nnz_cap == 3 and m.shape == (2, 4)
+
+
+# --------------------------------------------------------------------------
+# resolve_mode / $REPRO_VALIDATE
+# --------------------------------------------------------------------------
+
+
+def test_resolve_mode_default_off(monkeypatch):
+    monkeypatch.delenv("REPRO_VALIDATE", raising=False)
+    assert resolve_mode(None) == "off"
+
+
+def test_resolve_mode_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_VALIDATE", "host")
+    assert resolve_mode(None) == "host"
+    assert resolve_mode("off") == "off"  # explicit beats the env
+
+
+def test_resolve_mode_rejects_typo():
+    with pytest.raises(ValueError, match="unknown validate mode"):
+        resolve_mode("host ")
+    assert VALIDATE_MODES == ("off", "host", "device")
+
+
+def test_spgemm_stats_record_mode(ab, monkeypatch):
+    monkeypatch.delenv("REPRO_VALIDATE", raising=False)
+    a, b = ab
+    assert spgemm(a, b, method="sparse").stats["validate"] == "off"
+    assert spgemm(a, b, method="sparse",
+                  validate="host").stats["validate"] == "host"
+
+
+# --------------------------------------------------------------------------
+# validate="off" is dispatch-identical (acceptance criterion)
+# --------------------------------------------------------------------------
+
+
+def test_validate_off_replay_dispatch_identical(ab, monkeypatch):
+    monkeypatch.delenv("REPRO_VALIDATE", raising=False)
+    a, b = ab
+    ex = ReuseExecutor.from_matrices(a, b)
+    ex.apply(a.values, b.values)  # warm the jit cache
+    before = telemetry.snapshot()
+    for _ in range(5):
+        ex.apply(a.values, b.values)
+    after = telemetry.snapshot()
+    # zero added retraces and zero added structure hashes across 5 replays
+    assert after["trace"] == before["trace"]
+    assert after["hash"] == before["hash"]
+    assert after["fallback"] == before["fallback"]
+    assert after["dispatch"]["apply"] == before["dispatch"]["apply"] + 5
+    assert ex._guard is None  # off mode builds no guard at all
+
+
+def test_validate_host_replay_adds_no_traces_or_hashes(ab):
+    # host-mode per-replay checks are O(1) python — still no device work
+    a, b = ab
+    ex = ReuseExecutor.from_matrices(a, b, validate="host")
+    ex.apply(a.values, b.values)
+    before = telemetry.snapshot()
+    for _ in range(5):
+        ex.apply(a.values, b.values)
+    after = telemetry.snapshot()
+    assert after["trace"] == before["trace"]
+    assert after["hash"] == before["hash"]
+
+
+def test_validated_result_matches_unvalidated(ab):
+    a, b = ab
+    base = spgemm(a, b, method="sparse")
+    for mode in ("host", "device"):
+        res = spgemm(a, b, method="sparse", validate=mode)
+        assert bool(jnp.all(res.c.values == base.c.values))
+
+
+# --------------------------------------------------------------------------
+# f64/int XLA-fallback provenance agrees across entry points (satellite d)
+# --------------------------------------------------------------------------
+
+
+def _int_operands():
+    a = random_csr(24, 16, 3.0, seed=5)
+    b = random_csr(16, 20, 3.0, seed=6)
+    to_int = lambda m: CSR(indptr=m.indptr, indices=m.indices,
+                           values=jnp.ones_like(m.values, jnp.int32),
+                           shape=m.shape)
+    return to_int(a), to_int(b)
+
+
+def test_fallback_provenance_spgemm_lp():
+    a, b = _int_operands()
+    res = spgemm(a, b, method="lp")
+    assert res.stats["lp_backend"] == "xla"
+    assert telemetry.FALLBACK_COUNTS["dtype:lp->xla"] == 1
+
+
+def test_fallback_provenance_executor_pallas_lp():
+    a, b = _int_operands()
+    ex = ReuseExecutor.from_matrices(a, b, backend="pallas_lp")
+    ex.apply(a.values, b.values)
+    assert telemetry.FALLBACK_COUNTS["dtype:executor->xla"] == 1
+
+
+def test_fallback_provenance_numeric_values_auto():
+    a, b = _int_operands()
+    res = spgemm(a, b, method="sparse")
+    c_ell = csr_to_ell(res.c)
+    numeric_values(a, b, c_ell.indices, c_ell.row_nnz, kernel="auto")
+    assert telemetry.FALLBACK_COUNTS["dtype:numeric_auto->xla"] == 1
+    assert telemetry.KERNEL_COUNTS["xla"] == 1  # stats["kernel"] agreement
+
+
+def test_fallback_rule_cannot_drift_between_entry_points():
+    # the same int operands must fall back at EVERY entry point: if any one
+    # of the three dtype counters stays 0 the rule has drifted
+    a, b = _int_operands()
+    spgemm(a, b, method="lp")
+    ReuseExecutor.from_matrices(a, b, backend="pallas_lp").apply(
+        a.values, b.values)
+    res = spgemm(a, b, method="sparse")
+    c_ell = csr_to_ell(res.c)
+    numeric_values(a, b, c_ell.indices, c_ell.row_nnz, kernel="auto")
+    for key in ("dtype:lp->xla", "dtype:executor->xla",
+                "dtype:numeric_auto->xla"):
+        assert telemetry.FALLBACK_COUNTS[key] >= 1, key
+
+
+def test_f32_operands_do_not_bump_dtype_counters(ab):
+    a, b = ab
+    spgemm(a, b, method="lp")
+    assert telemetry.FALLBACK_COUNTS["dtype:lp->xla"] == 0
+
+
+# --------------------------------------------------------------------------
+# retry_call
+# --------------------------------------------------------------------------
+
+
+def test_retry_succeeds_after_transient_failures():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    slept = []
+    assert retry_call(flaky, retries=3, sleep=slept.append) == "ok"
+    assert calls["n"] == 3 and len(slept) == 2
+
+
+def test_retry_schedule_is_deterministic_and_bounded():
+    s1 = backoff_schedule(4, base_delay_s=0.05, max_delay_s=0.2, seed=7)
+    s2 = backoff_schedule(4, base_delay_s=0.05, max_delay_s=0.2, seed=7)
+    assert s1 == s2
+    assert all(d <= 0.2 * 1.5 for d in s1)  # max delay * (1 + jitter)
+    assert s1 != backoff_schedule(4, base_delay_s=0.05, max_delay_s=0.2,
+                                  seed=8)
+
+
+def test_retry_typed_give_up():
+    def always_fails():
+        raise RuntimeError("down")
+
+    slept = []
+    with pytest.raises(RetryExhaustedError) as ei:
+        retry_call(always_fails, retries=2, sleep=slept.append)
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.last_error, RuntimeError)
+    assert len(slept) == 2
+
+
+def test_retry_does_not_retry_deterministic_errors():
+    calls = {"n": 0}
+
+    def bad_input():
+        calls["n"] += 1
+        raise SpgemmInputError("corrupt operand")
+
+    with pytest.raises(SpgemmInputError):
+        retry_call(bad_input, retries=5, sleep=lambda d: None)
+    assert calls["n"] == 1  # no retry: the input won't get less corrupt
+
+    def mismatched():
+        calls["n"] += 1
+        raise PlanMismatchError("wrong plan")
+
+    with pytest.raises(PlanMismatchError):
+        retry_call(mismatched, retries=5, sleep=lambda d: None)
+    assert calls["n"] == 2
+
+
+def test_retry_on_retry_hook():
+    events = []
+
+    def flaky():
+        if len(events) < 1:
+            raise RuntimeError("once")
+        return 1
+
+    retry_call(flaky, retries=2, sleep=lambda d: None,
+               on_retry=lambda att, e, d: events.append((att, str(e))))
+    assert events == [(0, "once")]
+
+
+# --------------------------------------------------------------------------
+# Watchdog-guarded replay
+# --------------------------------------------------------------------------
+
+
+def test_executor_watchdog_records_slow_replay(ab):
+    a, b = ab
+    wd = StepWatchdog(deadline_s=0.0, policy="warn")  # everything is slow
+    ex = ReuseExecutor.from_matrices(a, b, watchdog=wd)
+    ex.apply(a.values, b.values)
+    ex.apply_batched(jnp.stack([a.values, a.values]), b.values)
+    assert len(wd.slow_steps) == 2
+    assert all(dt > 0 for _, dt in wd.slow_steps)
+
+
+def test_executor_watchdog_raise_policy(ab):
+    a, b = ab
+    wd = StepWatchdog(deadline_s=0.0, policy="raise")
+    ex = ReuseExecutor.from_matrices(a, b, watchdog=wd)
+    with pytest.raises(StragglerDetected):
+        ex.apply(a.values, b.values)
+
+
+def test_executor_no_watchdog_stays_async(ab):
+    a, b = ab
+    ex = ReuseExecutor.from_matrices(a, b)
+    out = ex.apply(a.values, b.values)
+    assert isinstance(out, jax.Array)  # unblocked dispatch, plain array out
