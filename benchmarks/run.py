@@ -30,6 +30,12 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        (overhead ratios vs validate=off), plus a retry_call
                        machinery row — the failure-model cost artifact
                        (BENCH_guard_*.json)
+  bench_serve        — serving-tier acceptance: sustained QPS + p50/p99
+                       latency over a synthetic mixed-structure trace,
+                       admission shed rates under a deliberate overload
+                       burst, and breaker open/short-circuit/recovery
+                       behavior with kernel faults injected mid-stream
+                       (BENCH_serve_*.json)
   bench_autotune     — autotuner regret table: static vs fitted vs measured
                        kernel picks over the accumulator sweep (regret in us
                        vs the static rule; the acceptance artifact for
@@ -628,6 +634,111 @@ def bench_guard(quick: bool = False):
           "backoff_total_s": float(sum(sched))})
 
 
+def bench_serve(quick: bool = False):
+    """Serving-tier acceptance (BENCH_serve_*.json): one synthetic trace
+    through ``SparseService``, in phases:
+
+      serve/warm     — traffic-log plan prefetch before traffic (built/hits)
+      serve/steady   — sustained mixed-structure load: requests round-robin
+                       over N structures, stepped as they queue; reports
+                       sustained QPS and p50/p99 request latency (admission
+                       -> completion, batching wait included)
+      serve/overload — a deliberate burst past max_queue plus infeasible
+                       deadlines: the shed-rate row (every shed typed, none
+                       silent — the counters are the evidence)
+      serve/chaos    — kernel:pallas armed mid-stream over singleton
+                       traffic: ladder fallbacks until the breaker opens,
+                       then short-circuits straight to XLA (the row carries
+                       both counts — short_circuits are the requests that
+                       SKIPPED paying the fault)
+      serve/recovery — fault cleared, cooldown elapsed: the half-open probe
+                       re-admits the fast path; breaker_closed=1 is the
+                       acceptance bit
+    """
+    from repro.core import telemetry
+    from repro.runtime import faults
+    from repro.serve import SparseService
+
+    n_structs = 2 if quick else 4
+    n_steady = 32 if quick else 128
+    n_chaos = 8 if quick else 16
+    structures = [
+        (random_csr(64 + 32 * i, 64, 3.0, 61 + i),
+         random_csr(64, 48, 3.0, 81 + i))
+        for i in range(n_structs)
+    ]
+    svc = SparseService(backend="pallas", max_batch=8, max_queue=64,
+                        breaker_threshold=3, breaker_cooldown_s=0.05,
+                        retries=1, sleep=lambda _: None)
+
+    # -- warm: record one request per structure, then prefetch the plans
+    for a, b in structures:
+        svc.submit(a, b)
+    svc.drain()
+    svc.plan_cache.clear()  # force the warm to do real work
+    ws = svc.warm()
+    emit("serve/warm", 0.0, {"structures": len(structures), **ws})
+
+    # -- steady traffic: round-robin structures, step whenever a batch fills
+    t0 = time.perf_counter()
+    for i in range(n_steady):
+        a, b = structures[i % n_structs]
+        svc.submit(a, b, deadline_s=60.0)
+        if svc.queue_depth >= svc.max_batch:
+            svc.step()
+    svc.drain()
+    steady_s = time.perf_counter() - t0
+    pct = svc.latency_percentiles()
+    completed = svc.counters["completed"]
+    emit("serve/steady", steady_s * 1e6 / max(n_steady, 1),
+         {"qps": n_steady / steady_s, "completed": completed,
+          "p50_ms": pct["p50"] * 1e3, "p99_ms": pct["p99"] * 1e3,
+          "group_dispatches": svc.counters["group_dispatches"]})
+
+    # -- overload: a burst past the queue bound + infeasible deadlines
+    a, b = structures[0]
+    for _ in range(8):
+        svc.submit(a, b, deadline_s=1e-9)  # infeasible vs the measured EWMA
+    for i in range(svc.max_queue + 16):
+        svc.submit(a, b)
+    svc.drain()
+    st = svc.stats()
+    emit("serve/overload", 0.0,
+         {"shed_rate": st["shed_rate"],
+          "shed_queue_full": st["shed_queue_full"],
+          "shed_deadline_infeasible": st["shed_deadline_infeasible"],
+          "shed_deadline_expired": st["shed_deadline_expired"],
+          "failed": st["failed"]})
+
+    # -- chaos: fast kernel faults mid-stream on singleton traffic
+    fb0 = telemetry.FALLBACK_COUNTS["fault:pallas->xla"]
+    deg0 = svc.counters["degraded_dispatches"]
+    with faults.failpoint("kernel:pallas"):
+        for i in range(n_chaos):
+            svc.submit(*structures[i % n_structs])
+            svc.step()  # singleton steps: the breaker-governed path
+    br = svc.stats()["breakers"]["pallas"]
+    emit("serve/chaos", 0.0,
+         {"requests": n_chaos,
+          "degraded": svc.counters["degraded_dispatches"] - deg0,
+          "fallbacks": telemetry.FALLBACK_COUNTS["fault:pallas->xla"] - fb0,
+          "breaker_opens": telemetry.BREAKER_COUNTS["pallas:open"],
+          "short_circuits": telemetry.BREAKER_COUNTS["pallas:short_circuit"],
+          "breaker_open": int(br["state"] != "closed")})
+
+    # -- recovery: cooldown elapses, the half-open probe closes the breaker
+    time.sleep(0.06)
+    for i in range(4):
+        svc.submit(*structures[i % n_structs])
+        svc.step()
+    br = svc.stats()["breakers"]["pallas"]
+    emit("serve/recovery", 0.0,
+         {"breaker_closed": int(br["state"] == "closed"),
+          "closes": telemetry.BREAKER_COUNTS["pallas:close"],
+          "reopens": telemetry.BREAKER_COUNTS["pallas:reopen"],
+          "completed_total": svc.counters["completed"]})
+
+
 def bench_train_smoke():
     """End-to-end LM substrate: smoke-model training step throughput."""
     from repro.configs import get_config
@@ -665,6 +776,7 @@ BENCHES = {
     "autotune": bench_autotune,
     "dist": lambda quick: bench_dist(),
     "guard": bench_guard,
+    "serve": bench_serve,
     "distributed": lambda quick: bench_distributed(),
     "train_smoke": lambda quick: bench_train_smoke(),
 }
@@ -749,6 +861,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_distributed()
         bench_dist()
         bench_guard()
+        bench_serve()
         bench_train_smoke()
     print(f"# {len(ROWS)} rows")
     if args.json:

@@ -477,6 +477,13 @@ def spgemm_grouped(pairs: Sequence[tuple[CSR, CSR]], *,
             f"backend={backend!r}): measure mode picks the backend "
             f"empirically, an explicit pin contradicts it")
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+    pairs = list(pairs)
+    if not pairs:
+        # The empty batch is a legal no-op (a serving tick with nothing
+        # admitted), not an error: return the empty result explicitly so a
+        # generator input or an all-shed batch can never fall through to an
+        # opaque downstream IndexError.
+        return []
     if plan_cache is None:
         cache = default_plan_cache()
     elif plan_cache is False:

@@ -40,6 +40,18 @@ def reset_hash_counts() -> None:
     HASH_COUNTS.clear()
 
 
+# Eviction telemetry, keyed by cache *name*: every LRU/bytes-bound eviction
+# bumps EVICT_COUNTS[cache.name], so the serving tier's plan-cache warmer and
+# bench_serve can detect thrash (a warm set that exceeds the cache bound shows
+# up as a nonzero eviction rate, not as mysteriously cold replays). clear()
+# does NOT count — it is an explicit reset, not capacity pressure.
+EVICT_COUNTS: Counter = Counter()
+
+
+def reset_evict_counts() -> None:
+    EVICT_COUNTS.clear()
+
+
 def plan_nbytes(plan) -> int:
     """Device bytes pinned by a cached plan (sum over its array leaves).
 
@@ -71,13 +83,15 @@ class PlanCache:
     it was just asked to store would silently disable reuse).
     """
 
-    def __init__(self, capacity: int = 16, max_bytes: int | None = None):
+    def __init__(self, capacity: int = 16, max_bytes: int | None = None,
+                 name: str = "plan"):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if max_bytes is not None and max_bytes < 1:
             raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.capacity = capacity
         self.max_bytes = max_bytes
+        self.name = name  # EVICT_COUNTS key; distinguishes cache instances
         self._entries: OrderedDict[str, Any] = OrderedDict()
         self._nbytes: dict[str, int] = {}
         # Per-entry sidecar metadata (e.g. the autotuner's measured replay
@@ -125,6 +139,7 @@ class PlanCache:
                 self.total_bytes -= self._nbytes.pop(old_key)
                 self._meta.pop(old_key, None)
                 self.evictions += 1
+                EVICT_COUNTS[self.name] += 1
 
     def set_meta(self, key: str, meta_key, value) -> bool:
         """Attach sidecar metadata to a *cached* entry.
@@ -157,6 +172,7 @@ class PlanCache:
     def stats(self) -> dict:
         total = self.hits + self.misses
         return {
+            "name": self.name,
             "size": len(self._entries),
             "capacity": self.capacity,
             "bytes": self.total_bytes,
@@ -187,7 +203,7 @@ def structure_key(a, b, fm_cap: int, pad_policy: str) -> str:
     return h.hexdigest()
 
 
-_DEFAULT_CACHE = PlanCache()
+_DEFAULT_CACHE = PlanCache(name="default")
 
 
 def default_plan_cache() -> PlanCache:

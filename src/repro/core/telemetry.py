@@ -18,7 +18,8 @@ from collections import Counter
 
 from repro.core.autotune import TUNE_COUNTS, reset_tune_counts
 from repro.core.executor import DISPATCH_COUNTS, reset_dispatch_counts
-from repro.core.plan_cache import HASH_COUNTS, reset_hash_counts
+from repro.core.plan_cache import (EVICT_COUNTS, HASH_COUNTS,
+                                   reset_evict_counts, reset_hash_counts)
 from repro.core.spgemm import TRACE_COUNTS, reset_trace_counts
 from repro.kernels.ops import KERNEL_COUNTS, reset_kernel_counts
 
@@ -39,6 +40,35 @@ def reset_fallback_counts() -> None:
     FALLBACK_COUNTS.clear()
 
 
+# Retry telemetry (PR 8). Bumped by ``runtime.retry.retry_call`` (lazy import
+# there; this module must not import runtime). Keys, per callsite label:
+#   "<label>:attempt"  every execution of the wrapped callable
+#   "<label>:retry"    a failed attempt that will be retried (backoff taken)
+#   "<label>:giveup"   the bound was hit: RetryExhaustedError raised
+# The serving tier reports retry rates straight off these (retry/attempt).
+RETRY_COUNTS: Counter = Counter()
+
+
+def reset_retry_counts() -> None:
+    RETRY_COUNTS.clear()
+
+
+# Circuit-breaker telemetry (PR 8). Bumped by ``serve.breaker`` on every
+# state transition, keyed "<breaker name>:<event>":
+#   "<name>:open"           closed -> open (failure threshold hit in window)
+#   "<name>:half_open"      open -> half-open (cooldown elapsed, probe next)
+#   "<name>:close"          half-open -> closed (probe succeeded)
+#   "<name>:reopen"         half-open -> open (probe failed)
+#   "<name>:short_circuit"  a dispatch was routed to the safe kernel because
+#                           the breaker was open (traffic the fast path never
+#                           saw — the load-shedding half of the story)
+BREAKER_COUNTS: Counter = Counter()
+
+
+def reset_breaker_counts() -> None:
+    BREAKER_COUNTS.clear()
+
+
 # name -> live Counter object (shared with the owning module, not copies)
 ALL_COUNTERS: dict[str, Counter] = {
     "trace": TRACE_COUNTS,
@@ -47,6 +77,9 @@ ALL_COUNTERS: dict[str, Counter] = {
     "kernel": KERNEL_COUNTS,
     "tune": TUNE_COUNTS,
     "fallback": FALLBACK_COUNTS,
+    "evict": EVICT_COUNTS,
+    "retry": RETRY_COUNTS,
+    "breaker": BREAKER_COUNTS,
 }
 
 _RESETS = (
@@ -56,6 +89,9 @@ _RESETS = (
     reset_kernel_counts,
     reset_tune_counts,
     reset_fallback_counts,
+    reset_evict_counts,
+    reset_retry_counts,
+    reset_breaker_counts,
 )
 
 

@@ -35,7 +35,8 @@ def dist_plan_key(structure_key: str, num_shards: int,
 
 
 _DEFAULT_DIST_CACHE = PlanCache(capacity=16,
-                                max_bytes=DEFAULT_DIST_CACHE_BYTES)
+                                max_bytes=DEFAULT_DIST_CACHE_BYTES,
+                                name="dist")
 
 
 def default_dist_plan_cache() -> PlanCache:

@@ -8,7 +8,8 @@ watchdog: liveness heartbeat + per-step/per-replay straggler deadlines.
 from repro.runtime.faults import (FAULTS, FaultSpec, InjectedFault, failpoint,
                                   inject_csr, reset_failpoints)
 from repro.runtime.retry import RetryExhaustedError, backoff_schedule, retry_call
-from repro.runtime.validate import (VALIDATE_MODES, CapacityOverflowError,
+from repro.runtime.validate import (VALIDATE_MODES, AdmissionRejected,
+                                    CapacityOverflowError, DeadlineExceeded,
                                     KernelFallbackError, PlanGuard,
                                     PlanMismatchError, SpgemmError,
                                     SpgemmInputError, check_csr, resolve_mode)
@@ -23,6 +24,8 @@ __all__ = [
     "PlanMismatchError",
     "CapacityOverflowError",
     "KernelFallbackError",
+    "AdmissionRejected",
+    "DeadlineExceeded",
     "RetryExhaustedError",
     "InjectedFault",
     "FaultSpec",

@@ -60,6 +60,7 @@ def retry_call(fn: Callable, *args,
                seed: int = 0,
                sleep: Callable[[float], None] = time.sleep,
                on_retry: Callable | None = None,
+               label: str | None = None,
                **kwargs):
     """Call ``fn(*args, **kwargs)``; retry transient failures up to
     ``retries`` extra attempts with jittered exponential backoff.
@@ -68,15 +69,26 @@ def retry_call(fn: Callable, *args,
     errors propagate on the first attempt. ``on_retry(attempt, exc, delay)``
     is invoked before each backoff sleep (telemetry hook). Raises
     ``RetryExhaustedError`` from the last failure once the bound is hit.
+
+    Every attempt, every taken backoff, and every give-up is recorded in
+    ``telemetry.RETRY_COUNTS`` keyed by ``label`` (default: the callable's
+    ``__name__``), so serving loops can report retry rates without wrapping
+    the hook: ``"<label>:attempt"`` / ``"<label>:retry"`` /
+    ``"<label>:giveup"``.
     """
+    from repro.core.telemetry import RETRY_COUNTS  # lazy: telemetry is core
+
     if retries < 0:
         raise ValueError(f"retries must be >= 0, got {retries}")
+    if label is None:
+        label = getattr(fn, "__name__", "anon")
     delays = backoff_schedule(retries, base_delay_s=base_delay_s,
                               max_delay_s=max_delay_s, jitter=jitter,
                               seed=seed)
     last: BaseException | None = None
     for attempt in range(retries + 1):
         try:
+            RETRY_COUNTS[f"{label}:attempt"] += 1
             return fn(*args, **kwargs)
         except no_retry_on:
             raise
@@ -84,10 +96,12 @@ def retry_call(fn: Callable, *args,
             last = e
             if attempt >= retries:
                 break
+            RETRY_COUNTS[f"{label}:retry"] += 1
             delay = delays[attempt]
             if on_retry is not None:
                 on_retry(attempt, e, delay)
             sleep(delay)
+    RETRY_COUNTS[f"{label}:giveup"] += 1
     raise RetryExhaustedError(
         f"gave up after {retries + 1} attempts: {last!r}",
         attempts=retries + 1, last_error=last) from last

@@ -81,6 +81,21 @@ class KernelFallbackError(SpgemmError, RuntimeError):
     raise instead of degrading). ``__cause__`` carries the original error."""
 
 
+class AdmissionRejected(SpgemmError, RuntimeError):
+    """The serving tier refused a request at the door: the bounded admission
+    queue is full (backpressure) or the deadline is already infeasible given
+    the current backlog. Raised/attached *before* any device work — an
+    overloaded service sheds typed, it never queues unboundedly or drops
+    silently (see ``serve.spgemm_service``)."""
+
+
+class DeadlineExceeded(SpgemmError, TimeoutError):
+    """An admitted request's deadline expired before its batch dispatched:
+    shed from the queue with this typed verdict instead of burning device
+    time on an answer nobody is waiting for. Subclasses ``TimeoutError`` so
+    generic timeout handling at call sites composes."""
+
+
 def resolve_mode(mode: str | None) -> str:
     """Normalize a ``validate=`` argument to a concrete mode.
 

@@ -1,3 +1,23 @@
-from repro.serve.engine import ServeEngine, prefill_to_cache
+"""repro.serve — the serving tier.
 
-__all__ = ["ServeEngine", "prefill_to_cache"]
+engine:         token-serving ServeEngine (prefill/decode over pinned plans).
+spgemm_service: overload-safe SpGEMM request serving (bounded admission,
+                deadlines, grouped dispatch, circuit-broken degradation).
+breaker:        per-kernel circuit breaker over the degradation ladder.
+warmer:         traffic-log driven plan-cache warming.
+"""
+from repro.serve.breaker import CircuitBreaker
+from repro.serve.engine import ServeEngine, prefill_to_cache
+from repro.serve.spgemm_service import SparseResponse, SparseService
+from repro.serve.warmer import TrafficEntry, TrafficLog, warm_plan_cache
+
+__all__ = [
+    "ServeEngine",
+    "prefill_to_cache",
+    "SparseService",
+    "SparseResponse",
+    "CircuitBreaker",
+    "TrafficLog",
+    "TrafficEntry",
+    "warm_plan_cache",
+]

@@ -1,0 +1,465 @@
+"""Overload-safe SpGEMM request serving over the executor stack.
+
+The paper's two-phase split is the shape of a serving workload: millions of
+requests whose *structures* repeat, so the symbolic phase is paid once per
+structure and every request replays a pinned plan. ``SparseService`` is that
+workload's front door, built so its headline property is *graceful behavior
+at and past saturation*:
+
+  * **Bounded admission queue with backpressure.** ``submit`` never queues
+    unboundedly: a full queue rejects with typed ``AdmissionRejected``.
+    Deadline-aware load shedding happens at both ends — admission refuses a
+    request whose deadline is infeasible given the measured backlog
+    (``AdmissionRejected``), and the batch loop sheds queued requests whose
+    deadline expired before dispatch (``DeadlineExceeded``). Every request
+    gets a typed verdict; nothing is silently dropped.
+  * **Validation at the door.** Operands are checked with
+    ``runtime.validate.check_csr`` (default ``validate="host"``) at
+    admission, so one corrupt request is rejected before it can poison a
+    batched dispatch shared with healthy requests.
+  * **Grouped dispatch over pinned plans.** Admitted requests are grouped by
+    ``structure_key`` + operand dtypes (one hash per request, paid at
+    admission); each group replays a pinned ``ReuseExecutor`` plan — one
+    ``apply_batched`` dispatch per multi-request group, one ``apply`` per
+    singleton — with plans resolved through the plan cache so repeated
+    structures never re-expand. The batch loop handles the empty tick
+    explicitly (an all-shed batch dispatches nothing).
+  * **Per-kernel circuit breaker** (``serve.breaker``) on top of the PR-7
+    degradation ladder: the ladder keeps a faulting fast kernel *correct*
+    (bitwise XLA fallback), the breaker keeps it *cheap* — repeated
+    ``fault:*`` fallbacks open the breaker and subsequent singleton traffic
+    routes straight to the recorded-safe XLA kernel; after a cooldown a
+    half-open probe re-admits the fast path. Transitions land in
+    ``telemetry.BREAKER_COUNTS``. Batched groups always use the vmapped XLA
+    formulation (one fused dispatch is the point of batching), so the
+    breaker governs singleton dispatches only.
+  * **Watchdog + retry.** Every group dispatch runs under a shared
+    ``StepWatchdog`` and ``runtime.retry.retry_call`` (label
+    ``serve.dispatch`` in ``telemetry.RETRY_COUNTS``): transient failures —
+    stragglers, injected chaos — are retried with bounded backoff;
+    deterministic typed errors fail the group immediately; exhaustion is a
+    typed ``RetryExhaustedError`` on every response in the group.
+  * **Plan-cache warming** (``serve.warmer``): the service logs the
+    structures it serves (zero extra hashes — the admission key is reused)
+    and ``warm()`` prefetches the hottest plans; eviction mid-stream is
+    tolerated everywhere (``resolve_plan`` transparently rebuilds, pinned
+    executors keep their plans regardless).
+
+Single-threaded by design: ``submit`` enqueues, ``step`` pumps one batch,
+``drain`` runs until empty. Determinism is the chaos suite's foundation —
+the clock is injectable, retry backoff is seeded, and there is no hidden
+thread to race a failpoint. A driver loop (or ``bench_serve``) provides the
+concurrency story by interleaving submits and steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import OrderedDict
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.executor import BACKENDS, ReuseExecutor
+from repro.core.meta import DEFAULT_PAD_POLICY
+from repro.core.plan_cache import PlanCache, structure_key
+from repro.core.spgemm import prepare_sparse_inputs, resolve_plan
+from repro.runtime.retry import retry_call
+from repro.runtime.validate import (AdmissionRejected, DeadlineExceeded,
+                                    KernelFallbackError, SpgemmError,
+                                    check_csr, resolve_mode)
+from repro.runtime.watchdog import StepWatchdog
+from repro.serve.breaker import CircuitBreaker
+from repro.serve.warmer import TrafficLog, warm_plan_cache
+from repro.sparse.formats import CSR
+
+RETRY_LABEL = "serve.dispatch"
+
+
+@dataclasses.dataclass
+class SparseResponse:
+    """The service's promise for one request; filled by the batch loop.
+
+    Exactly one of ``value`` (a CSR product) / ``error`` (a typed
+    ``SpgemmError``) is set once ``done``. ``backend``/``group_size``/
+    ``degraded`` record how the dispatch ran (None/0/False for rejected
+    requests that never dispatched).
+    """
+
+    request_id: int
+    submitted_at: float
+    priority: int = 0
+    deadline_s: float | None = None
+    done: bool = False
+    value: CSR | None = None
+    error: Exception | None = None
+    completed_at: float | None = None
+    backend: str | None = None
+    group_size: int = 0
+    degraded: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return self.done and self.error is None
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+
+@dataclasses.dataclass
+class _Pending:
+    """An admitted request waiting in the queue (operands already prepared
+    and structure-hashed at admission)."""
+
+    seq: int
+    a: CSR  # prepared (capacity-bucketed) operands
+    b: CSR
+    fm_cap: int
+    skey: str
+    priority: int
+    deadline: float | None  # absolute, on the service clock
+    response: SparseResponse
+
+
+class SparseService:
+    """Bounded-queue, deadline-aware SpGEMM serving over pinned plans.
+
+    backend: the fast replay path for singleton dispatches ("auto" resolves
+        to "xla"; "pallas"/"pallas_lp" opt into the Pallas kernels, guarded
+        by a per-kernel circuit breaker). Batched groups always take the
+        vmapped XLA formulation.
+    validate: admission-time operand validation mode (default "host" — the
+        serving tier rejects corruption at the door; "off" is the caller's
+        risk).
+    max_queue / max_batch: admission bound (backpressure past it) and the
+        largest request count one ``step`` dispatches.
+    plan_cache: the structure-keyed plan LRU (default: a private
+        ``PlanCache(name="serve")``); ``warm()`` prefetches into it.
+    max_executors: LRU bound on pinned per-structure executors (each pins
+        plan arrays on device — the cache must not hoard them).
+    retries: transient-failure retries per group dispatch (via
+        ``retry_call``; deterministic typed errors never retry).
+    watchdog: a ``StepWatchdog`` for dispatch deadlines (default: 60 s,
+        policy "warn" — a straggling replay is recorded, not killed; pass
+        policy="raise" to convert stragglers into retried failures).
+    breaker_*: circuit-breaker tuning for the fast kernel (threshold within
+        a sliding window; cooldown before the half-open probe).
+    clock: injectable monotonic clock (tests/chaos drive deadlines and
+        cooldowns deterministically).
+    """
+
+    def __init__(self, *, backend: str = "auto", validate: str | None = "host",
+                 max_queue: int = 256, max_batch: int = 16,
+                 pad_policy: str | None = None, plan_cache: PlanCache | None = None,
+                 max_executors: int = 32, retries: int = 1,
+                 retry_base_delay_s: float = 0.01,
+                 watchdog: StepWatchdog | None = None,
+                 breaker_threshold: int = 3, breaker_window_s: float = 30.0,
+                 breaker_cooldown_s: float = 5.0,
+                 interpret: bool | None = None,
+                 admission_slack: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 traffic_log: TrafficLog | None = None):
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        if max_queue < 1 or max_batch < 1:
+            raise ValueError(
+                f"max_queue and max_batch must be >= 1, got "
+                f"max_queue={max_queue}, max_batch={max_batch}")
+        self.fast_backend = "xla" if backend == "auto" else backend
+        self.validate_mode = resolve_mode(validate)
+        self.max_queue = max_queue
+        self.max_batch = max_batch
+        self.pad_policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
+        self.plan_cache = (PlanCache(capacity=32, name="serve")
+                           if plan_cache is None else plan_cache)
+        self.max_executors = max_executors
+        self.retries = retries
+        self.retry_base_delay_s = retry_base_delay_s
+        self.watchdog = watchdog or StepWatchdog(deadline_s=60.0, policy="warn")
+        self.interpret = interpret
+        self.admission_slack = admission_slack
+        self.clock = clock
+        self._sleep = sleep
+        self.traffic_log = TrafficLog(self.pad_policy) if traffic_log is None \
+            else traffic_log
+        self._breakers: dict[str, CircuitBreaker] = {}
+        if self.fast_backend != "xla":
+            self._breakers[self.fast_backend] = CircuitBreaker(
+                self.fast_backend, failure_threshold=breaker_threshold,
+                window_s=breaker_window_s, cooldown_s=breaker_cooldown_s,
+                clock=clock)
+        self._queue: list[_Pending] = []
+        self._executors: OrderedDict[str, ReuseExecutor] = OrderedDict()
+        self._seq = 0
+        self._ewma_step_s: float | None = None
+        self._latencies_s: list[float] = []
+        self.counters = {
+            "submitted": 0, "admitted": 0, "completed": 0, "failed": 0,
+            "shed_queue_full": 0, "shed_deadline_infeasible": 0,
+            "shed_deadline_expired": 0, "rejected_validation": 0,
+            "steps": 0, "group_dispatches": 0, "degraded_dispatches": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def _est_wait_s(self) -> float:
+        """Predicted queue wait for a request admitted right now: measured
+        EWMA step latency x the number of batch ticks ahead of it. Zero
+        until the first step lands (an idle service admits everything)."""
+        if self._ewma_step_s is None:
+            return 0.0
+        ticks = math.ceil((len(self._queue) + 1) / self.max_batch)
+        return ticks * self._ewma_step_s
+
+    def _reject(self, resp: SparseResponse, err: SpgemmError,
+                reason: str) -> SparseResponse:
+        resp.done = True
+        resp.error = err
+        resp.completed_at = self.clock()
+        self.counters[reason] += 1
+        return resp
+
+    def submit(self, a: CSR, b: CSR, *, deadline_s: float | None = None,
+               priority: int = 0) -> SparseResponse:
+        """Offer one multiply to the service; returns its response promise.
+
+        Rejections complete the response immediately with a typed error
+        (``AdmissionRejected`` for backpressure/infeasible deadlines, the
+        validation taxonomy for corrupt operands) — ``submit`` itself never
+        raises for per-request conditions, so a driver loop handles mixed
+        outcomes uniformly.
+        """
+        now = self.clock()
+        resp = SparseResponse(request_id=self._seq, submitted_at=now,
+                              priority=priority, deadline_s=deadline_s)
+        self._seq += 1
+        self.counters["submitted"] += 1
+        if len(self._queue) >= self.max_queue:
+            return self._reject(resp, AdmissionRejected(
+                f"admission queue full ({self.max_queue} pending): "
+                f"backpressure — shed upstream or retry later"),
+                "shed_queue_full")
+        if self.validate_mode != "off":
+            try:
+                check_csr(a, self.validate_mode, name="A")
+                check_csr(b, self.validate_mode, name="B")
+            except SpgemmError as e:
+                return self._reject(resp, e, "rejected_validation")
+        try:
+            pa, pb, _, _, fm_cap = prepare_sparse_inputs(a, b, self.pad_policy)
+        except SpgemmError as e:  # e.g. CapacityOverflowError from repad
+            return self._reject(resp, e, "rejected_validation")
+        if deadline_s is not None:
+            est = self._est_wait_s() * self.admission_slack
+            if est > deadline_s:
+                return self._reject(resp, AdmissionRejected(
+                    f"deadline {deadline_s:.4f}s infeasible: estimated "
+                    f"queue wait {est:.4f}s at depth {len(self._queue)}"),
+                    "shed_deadline_infeasible")
+        skey = structure_key(pa, pb, fm_cap, self.pad_policy)
+        self.traffic_log.record_prepared(skey, pa, pb, fm_cap)
+        self._queue.append(_Pending(
+            seq=resp.request_id, a=pa, b=pb, fm_cap=fm_cap, skey=skey,
+            priority=priority,
+            deadline=None if deadline_s is None else now + deadline_s,
+            response=resp))
+        self.counters["admitted"] += 1
+        return resp
+
+    # ------------------------------------------------------------------
+    # Batch loop
+    # ------------------------------------------------------------------
+
+    def _finish(self, p: _Pending, *, value: CSR | None = None,
+                error: Exception | None = None, backend: str | None = None,
+                group_size: int = 0, degraded: bool = False) -> None:
+        r = p.response
+        r.done = True
+        r.value = value
+        r.error = error
+        r.completed_at = self.clock()
+        r.backend = backend
+        r.group_size = group_size
+        r.degraded = degraded
+        if error is None:
+            self.counters["completed"] += 1
+            self._latencies_s.append(r.latency_s)
+        else:
+            self.counters["failed"] += 1
+
+    def _executor_for(self, p: _Pending) -> ReuseExecutor:
+        """Pinned executor for one structure (LRU-bounded). A plan-cache
+        eviction between steps is invisible here: an already-pinned executor
+        keeps its plan, and a missing entry is transparently rebuilt by
+        ``resolve_plan``."""
+        ex = self._executors.get(p.skey)
+        if ex is not None:
+            self._executors.move_to_end(p.skey)
+            return ex
+        plan, _, _ = resolve_plan(p.a, p.b, p.fm_cap, self.pad_policy,
+                                  self.plan_cache, key=p.skey)
+        ex = ReuseExecutor(plan, backend="auto", interpret=self.interpret,
+                           watchdog=self.watchdog,
+                           on_kernel_failure="fallback")
+        self._executors[p.skey] = ex
+        while len(self._executors) > self.max_executors:
+            self._executors.popitem(last=False)
+        return ex
+
+    def _dispatch_group(self, items: list[_Pending]) -> None:
+        """One structure+dtype group -> ONE device dispatch (plus ladder /
+        retry re-dispatches), under breaker routing for singletons."""
+        ex = self._executor_for(items[0])
+        breaker = None
+        backend = "xla"
+        if len(items) == 1 and self.fast_backend != "xla":
+            breaker = self._breakers[self.fast_backend]
+            backend = self.fast_backend if breaker.allow() else "xla"
+        took_fast = breaker is not None and backend == self.fast_backend
+        ex.backend = backend
+        ex.kernel_source = "static"
+
+        def dispatch():
+            if len(items) == 1:
+                p = items[0]
+                return [ex.apply(p.a.values, p.b.values)]
+            a_stack = jnp.stack([p.a.values for p in items])
+            b_stack = jnp.stack([p.b.values for p in items])
+            out = ex.apply_batched(a_stack, b_stack)
+            return [out[i] for i in range(len(items))]
+
+        self.counters["group_dispatches"] += 1
+        try:
+            vals = retry_call(dispatch, retries=self.retries,
+                              base_delay_s=self.retry_base_delay_s,
+                              label=RETRY_LABEL, sleep=self._sleep)
+        except SpgemmError as e:
+            if took_fast:
+                breaker.record_failure()  # a raising fast path counts too
+            for p in items:
+                self._finish(p, error=e, backend=backend,
+                             group_size=len(items))
+            return
+        except Exception as e:  # non-taxonomy leak: wrap typed, never bare
+            err = KernelFallbackError(
+                f"group dispatch failed outside the taxonomy: {e!r}")
+            err.__cause__ = e
+            if took_fast:
+                breaker.record_failure()
+            for p in items:
+                self._finish(p, error=err, backend=backend,
+                             group_size=len(items))
+            return
+        degraded = ex.kernel_source == "fallback"
+        if degraded:
+            self.counters["degraded_dispatches"] += 1
+        if took_fast:
+            (breaker.record_failure if degraded
+             else breaker.record_success)()
+        for p, v in zip(items, vals):
+            self._finish(p, value=ex.to_csr(v), backend=backend,
+                         group_size=len(items), degraded=degraded)
+
+    def step(self) -> int:
+        """Pump one batch: shed expired requests, group up to ``max_batch``
+        admitted ones by structure+dtype, one dispatch per group. Returns
+        the number of responses resolved (completions + sheds)."""
+        self.counters["steps"] += 1
+        now = self.clock()
+        resolved = 0
+        # priority order, FIFO within a priority level
+        self._queue.sort(key=lambda p: (-p.priority, p.seq))
+        batch: list[_Pending] = []
+        rest: list[_Pending] = []
+        for p in self._queue:
+            if p.deadline is not None and now > p.deadline:
+                self._finish(p, error=DeadlineExceeded(
+                    f"request {p.seq} deadline expired in queue "
+                    f"({now - p.deadline:.4f}s past)"))
+                self.counters["failed"] -= 1  # reclassify: shed, not failed
+                self.counters["shed_deadline_expired"] += 1
+                resolved += 1
+            elif len(batch) < self.max_batch:
+                batch.append(p)
+            else:
+                rest.append(p)
+        self._queue = rest
+        if not batch:  # the empty tick: dispatch nothing (cf. spgemm_grouped)
+            return resolved
+        t0 = self.clock()
+        groups: OrderedDict[tuple, list[_Pending]] = OrderedDict()
+        for p in batch:
+            gkey = (p.skey, str(p.a.values.dtype), str(p.b.values.dtype))
+            groups.setdefault(gkey, []).append(p)
+        for items in groups.values():
+            self._dispatch_group(items)
+            resolved += len(items)
+        step_s = self.clock() - t0
+        self._ewma_step_s = (step_s if self._ewma_step_s is None
+                             else 0.8 * self._ewma_step_s + 0.2 * step_s)
+        return resolved
+
+    def drain(self, max_steps: int | None = None) -> int:
+        """Run ``step`` until the queue empties (or ``max_steps``); returns
+        total responses resolved."""
+        total = 0
+        steps = 0
+        while self._queue and (max_steps is None or steps < max_steps):
+            total += self.step()
+            steps += 1
+        return total
+
+    # ------------------------------------------------------------------
+    # Warming + reporting
+    # ------------------------------------------------------------------
+
+    def warm(self, log: TrafficLog | None = None,
+             limit: int | None = None) -> dict:
+        """Prefetch plans for the hottest structures of ``log`` (default:
+        the service's own traffic log) into the plan cache."""
+        return warm_plan_cache(log or self.traffic_log, self.plan_cache,
+                               limit=limit)
+
+    def latency_percentiles(self, qs=(50.0, 99.0)) -> dict[str, float]:
+        """{"p50": s, "p99": s, ...} over completed-request latencies."""
+        if not self._latencies_s:
+            return {f"p{q:g}": float("nan") for q in qs}
+        import numpy as np
+
+        arr = np.asarray(self._latencies_s)
+        return {f"p{q:g}": float(np.percentile(arr, q)) for q in qs}
+
+    def stats(self) -> dict:
+        from repro.core.telemetry import RETRY_COUNTS
+
+        total = self.counters["submitted"]
+        shed = (self.counters["shed_queue_full"]
+                + self.counters["shed_deadline_infeasible"]
+                + self.counters["shed_deadline_expired"])
+        return {
+            **self.counters,
+            "queue_depth": len(self._queue),
+            "executors": len(self._executors),
+            "ewma_step_s": self._ewma_step_s,
+            "shed_rate": (shed / total) if total else 0.0,
+            "plan_cache": self.plan_cache.stats(),
+            "breakers": {n: b.snapshot() for n, b in self._breakers.items()},
+            "retry": {
+                "attempts": RETRY_COUNTS[f"{RETRY_LABEL}:attempt"],
+                "retries": RETRY_COUNTS[f"{RETRY_LABEL}:retry"],
+                "giveups": RETRY_COUNTS[f"{RETRY_LABEL}:giveup"],
+            },
+        }

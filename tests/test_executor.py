@@ -137,6 +137,16 @@ def test_apply_batched_broadcast_unbatched_operand():
         ex.apply_batched(a_stack[0], p.values)  # neither operand stacked
 
 
+def test_spgemm_grouped_empty_batch_is_noop():
+    """An empty request list (a serving tick with nothing admitted) is a
+    legal no-op: empty result, zero dispatches — and generators work too."""
+    reset_dispatch_counts()
+    assert spgemm_grouped([]) == []
+    assert spgemm_grouped(iter(())) == []
+    assert DISPATCH_COUNTS["apply"] == 0
+    assert DISPATCH_COUNTS["apply_batched"] == 0
+
+
 def test_spgemm_grouped_mixed_structures():
     """Interleaved structures: results correct + one dispatch per group."""
     a1 = random_csr(26, 30, 3.0, 31)

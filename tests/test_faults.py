@@ -255,3 +255,72 @@ def test_registry_covers_both_fault_kinds():
         assert s.expects is not None  # every data fault names its error
     for s in faults.kernel_faults():
         assert s.site and s.site.startswith("kernel:")
+
+
+# --------------------------------------------------------------------------
+# Chaos under traffic: the serving tier's acceptance bar
+# --------------------------------------------------------------------------
+
+
+def test_service_chaos_under_traffic():
+    """Live traffic through SparseService while everything misbehaves at
+    once — kernel failpoints flapping, one corrupt request in the stream, a
+    forced plan-cache eviction mid-stream. The bar is the failure model's:
+    every COMPLETED response is bitwise-equal to the XLA reference and every
+    non-completion is a typed SpgemmError; nothing silent, nothing dropped.
+    """
+    from repro.serve import SparseService
+    from repro.runtime.validate import SpgemmError, SpgemmInputError
+
+    structures = [
+        (random_csr(32, 24, 4.0, seed=1), random_csr(24, 40, 4.0, seed=2)),
+        (random_csr(16, 24, 3.0, seed=7), random_csr(24, 8, 3.0, seed=8)),
+        (random_csr(48, 16, 2.0, seed=9), random_csr(16, 48, 3.0, seed=10)),
+    ]
+    refs = [spgemm(a, b, method="sparse").c.to_dense() for a, b in structures]
+    svc = SparseService(backend="pallas", max_batch=2, breaker_threshold=2,
+                        retries=1, sleep=lambda _: None)
+    ledger = []  # (response, reference | None for the corrupt one)
+
+    def pump(i, corrupt=False):
+        a, b = structures[i % len(structures)]
+        if corrupt:
+            a = faults.inject_csr("nan_values", a)
+        ledger.append((svc.submit(a, b), None if corrupt else refs[i % 3]))
+
+    for i in range(4):  # clean warm-up traffic
+        pump(i)
+    svc.drain()
+    with faults.failpoint("kernel:pallas"):  # fast kernel starts flapping
+        for i in range(4):
+            pump(i)
+        svc.drain()
+        pump(0, corrupt=True)  # a hostile request inside the fault window
+        svc.plan_cache.clear()  # and the cache evicts mid-stream
+        for i in range(3):
+            pump(i)
+        svc.drain()
+    for i in range(3):  # recovery traffic, failpoint cleared
+        pump(i)
+    svc.drain()
+
+    assert len(ledger) == 15
+    completed = rejected = 0
+    for resp, ref in ledger:
+        assert resp.done  # nothing silently dropped
+        if ref is None:  # the corrupt request: typed rejection at the door
+            assert isinstance(resp.error, SpgemmInputError)
+            rejected += 1
+        else:
+            assert resp.ok, f"unexpected failure: {resp.error!r}"
+            assert bool(jnp.all(resp.value.to_dense() == ref))  # bitwise
+            completed += 1
+    assert completed == 14 and rejected == 1
+    # the chaos left evidence, not wreckage: ladder fallbacks were counted,
+    # and the flapping kernel tripped the breaker
+    assert telemetry.FALLBACK_COUNTS["fault:pallas->xla"] >= 1
+    assert telemetry.BREAKER_COUNTS["pallas:open"] >= 1
+    stats = svc.stats()
+    assert stats["rejected_validation"] == 1
+    assert stats["completed"] == 14
+    assert stats["failed"] == 0

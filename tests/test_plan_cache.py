@@ -182,6 +182,9 @@ def test_lru_eviction_bound():
         assert spgemm(a, b, method="sparse", plan_cache=cache).stats["cache"] == "miss"
     assert len(cache) == 2
     assert cache.evictions == 1
+    from repro.core.plan_cache import EVICT_COUNTS
+
+    assert EVICT_COUNTS[cache.name] == 1  # telemetry mirrors the instance
     # oldest (mats[0]) was evicted; newest (mats[2]) still resident
     a0, b0 = mats[0]
     assert spgemm(a0, b0, method="sparse", plan_cache=cache).stats["cache"] == "miss"
@@ -206,6 +209,9 @@ def test_bytes_bound_eviction():
     for a_i, b_i in mats:
         spgemm(a_i, b_i, method="sparse", plan_cache=cache)
     assert cache.evictions >= 1
+    from repro.core.plan_cache import EVICT_COUNTS
+
+    assert EVICT_COUNTS[cache.name] == cache.evictions
     assert cache.total_bytes <= cache.max_bytes
     assert cache.total_bytes == sum(cache._nbytes.values())
     # newest structure stayed resident
