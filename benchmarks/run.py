@@ -36,6 +36,12 @@ Output: ``name,us_per_call,derived`` CSV rows.
                        burst, and breaker open/short-circuit/recovery
                        behavior with kernel faults injected mid-stream
                        (BENCH_serve_*.json)
+  bench_obs          — observability overhead gate: disabled-span unit
+                       cost, tracing-off replay overhead (the <= 2% CI
+                       gate, with a telemetry-asserted dispatch-identity
+                       bit), tracing-on ratio, and a traced chaos mini-run
+                       exported as trace_obs_sample.json
+                       (BENCH_obs_*.json)
   bench_autotune     — autotuner regret table: static vs fitted vs measured
                        kernel picks over the accumulator sweep (regret in us
                        vs the static rule; the acceptance artifact for
@@ -66,6 +72,7 @@ import argparse
 import json
 import os
 import time
+import uuid
 
 import jax
 import jax.numpy as jnp
@@ -101,15 +108,23 @@ def _fmt_val(v) -> str:
     return f"{v:.6g}" if isinstance(v, float) else str(v)
 
 
+# One id per harness invocation: lets BENCH_*.json artifacts from different
+# runs be ordered (timestamp) and joined (run_id) into a trajectory.
+RUN_ID = uuid.uuid4().hex[:12]
+
+
 def _env_stamp() -> dict:
-    """backend/platform/jax-version stamp attached to every result row, so
-    downstream consumers (``autotune.fit_thresholds``) can key per-backend
-    fits without trusting payload-level context."""
+    """backend/platform/jax-version + run identity stamp attached to every
+    result row, so downstream consumers (``autotune.fit_thresholds``, the
+    BENCH trajectory) can key per-backend fits and join rows across runs
+    without trusting payload-level context."""
     dev = jax.devices()[0]
     return {
         "backend": jax.default_backend(),
         "platform": getattr(dev, "device_kind", "unknown"),
         "jax_version": jax.__version__,
+        "run_id": RUN_ID,
+        "timestamp": time.time(),
     }
 
 
@@ -739,6 +754,94 @@ def bench_serve(quick: bool = False):
           "completed_total": svc.counters["completed"]})
 
 
+def bench_obs(quick: bool = False):
+    """Observability overhead gate (BENCH_obs_*.json).
+
+    The PR-9 contract is "tracing off costs nothing measurable on the pinned
+    replay hot path". Rows:
+
+      obs/span_off      — unit cost of one *disabled* span() call (amortized
+                          over 10k calls): the only thing tracing-off adds
+                          per span site
+      obs/replay_off    — the pinned replay with tracing off. Its
+                          ``off_overhead`` derived metric is the CI gate:
+                          span-site count on the replay path x the measured
+                          disabled-span unit cost, as a fraction of the
+                          replay latency (must stay <= 0.02). The row also
+                          carries ``dispatch_identical`` — a telemetry diff
+                          over the timed loop proving zero added traces and
+                          zero added hashes
+      obs/replay_traced — the same replay with tracing ON (informational:
+                          what turning the layer on costs)
+      obs/sample_trace  — a traced mini chaos run through ``SparseService``
+                          (kernel:pallas armed, then recovery) exported as
+                          Chrome trace-event JSON to trace_obs_sample.json;
+                          the row counts exported spans and flight-recorder
+                          events (both must be nonzero — the artifact CI
+                          uploads next to the BENCH json)
+    """
+    from repro import obs
+    from repro.core import telemetry
+    from repro.runtime import faults
+    from repro.serve import SparseService
+
+    obs.set_tracing("off")
+    a = random_csr(256, 256, 4.0, 71)
+    b = random_csr(256, 256, 4.0, 72)
+    ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
+    jax.block_until_ready(ex.apply(a.values, b.values))  # warm the dispatch
+
+    # dispatch identity: the timed tracing-off loop must bump zero trace and
+    # zero hash counters (the telemetry-asserted half of the contract)
+    before = telemetry.snapshot()
+    us_off, _ = timeit(lambda: ex.apply(a.values, b.values))
+    delta = telemetry.diff(before, telemetry.snapshot())
+    identical = int("trace" not in delta and "hash" not in delta)
+
+    n = 10_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("bench.noop"):
+            pass
+    span_off_us = (time.perf_counter() - t0) * 1e6 / n
+    # the replay path crosses one enabled() check in the executor; price two
+    # full disabled span() calls per replay to stay conservative
+    spans_per_replay = 2
+    off_overhead = spans_per_replay * span_off_us / us_off
+    emit("obs/span_off", span_off_us, {"calls": n})
+    emit("obs/replay_off", us_off,
+         {"off_overhead": off_overhead, "dispatch_identical": identical,
+          "spans_per_replay": spans_per_replay})
+
+    obs.set_tracing("on")
+    obs.clear()
+    us_on, _ = timeit(lambda: ex.apply(a.values, b.values))
+    emit("obs/replay_traced", us_on, {"traced_ratio": us_on / us_off})
+
+    # sample artifact: a traced chaos mini-run through the serving tier
+    obs.reset_obs()
+    obs.set_tracing("on")
+    sa = random_csr(48, 48, 3.0, 73)
+    sb = random_csr(48, 32, 3.0, 74)
+    svc = SparseService(backend="pallas", max_batch=2, breaker_threshold=3,
+                        retries=1, sleep=lambda _: None)
+    with faults.failpoint("kernel:pallas"):
+        svc.submit(sa, sb)
+        svc.step()  # faulting fast path: ladder fallback, recorder event
+    for _ in range(3):
+        svc.submit(sa, sb)
+        svc.step()
+    path = "trace_obs_sample.json"
+    payload = obs.export_chrome_trace(path)
+    rec_events = len(obs.default_recorder().events())
+    emit("obs/sample_trace", 0.0,
+         {"trace_events": len(payload["traceEvents"]),
+          "recorder_events": rec_events,
+          "fallbacks": telemetry.FALLBACK_COUNTS["fault:pallas->xla"]})
+    obs.set_tracing(None)  # back to the $REPRO_TRACE default
+    obs.reset_obs()
+
+
 def bench_train_smoke():
     """End-to-end LM substrate: smoke-model training step throughput."""
     from repro.configs import get_config
@@ -777,6 +880,7 @@ BENCHES = {
     "dist": lambda quick: bench_dist(),
     "guard": bench_guard,
     "serve": bench_serve,
+    "obs": bench_obs,
     "distributed": lambda quick: bench_distributed(),
     "train_smoke": lambda quick: bench_train_smoke(),
 }

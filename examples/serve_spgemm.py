@@ -18,11 +18,17 @@ whole contract on CPU:
      half-open probe re-admits the fast path once it heals
   5. warming — the service's own traffic log prefetches the hot plans after
      an eviction, so the next burst never pays a plan build
+  6. observability — turn tracing on for a burst: request trace ids ride
+     every span into a Chrome trace export, per-phase latency histograms
+     land in the metrics registry, and ``stats(debug=True)`` returns the
+     flight-recorder ring (tracing off costs nothing — see
+     ``benchmarks.run --bench obs``)
 
 Run: PYTHONPATH=src python examples/serve_spgemm.py
 """
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import spgemm, telemetry
 from repro.runtime import AdmissionRejected, DeadlineExceeded, faults
 from repro.serve import SparseService
@@ -69,7 +75,8 @@ def main():
           f"AdmissionRejected, the rest completed")
 
     # 3. deadlines: refused at the door, shed from the queue ---------------
-    svc._ewma_step_s = 0.5  # pretend a step costs 0.5s (measured EWMA)
+    svc.metrics.reset()    # forget the measured (fast) steps for this demo
+    svc.step_hint_s = 0.5  # pretend a step costs 0.5s (seeds the estimator)
     infeasible = svc.submit(*structures[0], deadline_s=0.1)
     assert isinstance(infeasible.error, AdmissionRejected)
     expired = svc.submit(*structures[0], deadline_s=1.0)
@@ -111,6 +118,26 @@ def main():
     assert svc.plan_cache.stats()["misses"] == misses0
     print(f"5. warmed {stats['built']} plans from the traffic log; the next "
           f"burst ran with zero plan-cache misses")
+
+    # 6. observability: trace a burst, read the histograms, dump the ring --
+    obs.set_tracing("on")  # or REPRO_TRACE=1, or spgemm(..., trace=True)
+    traced = [svc.submit(*structures[i % 2]) for i in range(4)]
+    svc.drain()
+    assert all(r.ok for r in traced)
+    payload = obs.export_chrome_trace("trace_serve_quickstart.json")
+    spans = payload["traceEvents"]
+    tids = sorted({e["args"].get("trace_id") for e in spans
+                   if e["args"].get("trace_id")})
+    hist = obs.default_registry().histogram("numeric.dispatch")
+    debug = svc.stats(debug=True)
+    print(f"6. traced burst: {len(spans)} spans from requests {tids} -> "
+          f"trace_serve_quickstart.json (open in chrome://tracing); "
+          f"numeric.dispatch p50={hist.percentile(50)*1e6:.0f}us "
+          f"p99={hist.percentile(99)*1e6:.0f}us over {hist.count} dispatches; "
+          f"flight recorder holds {debug['flight_recorder']['recorded']} "
+          f"events")
+    obs.set_tracing(None)  # back to the $REPRO_TRACE default (off)
+
     print(f"\nfinal stats: completed={svc.counters['completed']} "
           f"shed_rate={svc.stats()['shed_rate']:.3f} "
           f"breaker={svc.stats()['breakers']['pallas']['state']}")

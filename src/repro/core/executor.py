@@ -37,6 +37,7 @@ the point of batching.
 """
 from __future__ import annotations
 
+import time
 from collections import Counter, OrderedDict
 from functools import partial
 from typing import Sequence
@@ -46,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core.meta import DEFAULT_PAD_POLICY, f32_accumulation_ok
 from repro.core.plan_cache import default_plan_cache, structure_key
+from repro.obs import trace as obs_trace
 from repro.core.spgemm import (
     SpgemmPlan,
     _note_trace,
@@ -339,10 +341,12 @@ class ReuseExecutor:
     def _dispatch(self, fn, a_values, b_values):
         """One replay dispatch under the degradation ladder + watchdog.
 
-        Failure catching lives HERE, outside jit: a trace that dies is never
-        cached, so re-dispatching ``backend="xla"`` compiles into its own
-        (clean) cache entry — the failed backend cannot poison it. All
-        counter bumps are eager host-side for the same reason.
+        Tracing split: when the tracer is off (the default), this is exactly
+        the bare ladder — no span, no clock read, no recorder entry on
+        success (fallbacks and errors are always recorded; they are rare and
+        already off the fast path). When tracing is on, the dispatch gets a
+        ``numeric.dispatch`` span (feeding the per-kernel histograms) and a
+        flight-recorder event with the host-side duration.
         """
         backend = self.backend
         if backend in ("pallas", "pallas_lp") and not f32_accumulation_ok(
@@ -352,6 +356,30 @@ class ReuseExecutor:
             from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
 
             FALLBACK_COUNTS["dtype:executor->xla"] += 1
+        if not obs_trace.enabled():
+            return self._run_ladder(fn, a_values, b_values, backend)
+        from repro.obs import recorder  # lazy: off the untraced hot path
+
+        t0 = time.perf_counter()
+        with obs_trace.span("numeric.dispatch", kernel=backend,
+                            site="executor") as sp:
+            out = self._run_ladder(fn, a_values, b_values, backend, sp=sp)
+        recorder.record(
+            "dispatch", kernel=self.backend, structure_key=self._skey,
+            shapes=f"{tuple(a_values.shape)}x{tuple(b_values.shape)}",
+            duration_s=time.perf_counter() - t0,
+            verdict=("fallback" if sp.attrs.get("fallback") else "ok"),
+            trace_id=obs_trace.current_trace_id())
+        return out
+
+    def _run_ladder(self, fn, a_values, b_values, backend, sp=None):
+        """The degradation ladder proper (tracing-agnostic).
+
+        Failure catching lives HERE, outside jit: a trace that dies is never
+        cached, so re-dispatching ``backend="xla"`` compiles into its own
+        (clean) cache entry — the failed backend cannot poison it. All
+        counter bumps are eager host-side for the same reason.
+        """
         try:
             faults.check(f"kernel:{backend}")
             out = self._timed(fn, a_values, b_values, backend)
@@ -361,14 +389,27 @@ class ReuseExecutor:
             raise
         except Exception as e:
             if self.on_kernel_failure == "raise" or backend == "xla":
-                raise KernelFallbackError(
+                err = KernelFallbackError(
                     f"replay backend {backend!r} failed"
                     + ("" if backend == "xla"
-                       else " and on_kernel_failure='raise'")) from e
+                       else " and on_kernel_failure='raise'"))
+                from repro.obs import recorder  # lazy: error path only
+
+                recorder.note_error(err, kernel=backend, site="executor",
+                                    structure_key=self._skey,
+                                    trace_id=obs_trace.current_trace_id())
+                raise err from e
             from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
+            from repro.obs import recorder  # lazy: fallback path only
 
             FALLBACK_COUNTS[f"fault:{backend}->xla"] += 1
             self.kernel_source = "fallback"
+            recorder.record("fallback", kernel=backend,
+                            fallback=f"{backend}->xla", verdict="fallback",
+                            site="executor", structure_key=self._skey,
+                            trace_id=obs_trace.current_trace_id())
+            if sp is not None:
+                sp.set("fallback", f"{backend}->xla")
             out = self._timed(_apply, a_values, b_values, "xla")
         if faults.armed("executor:poison_output") and jnp.issubdtype(
                 out.dtype, jnp.floating):
@@ -433,14 +474,18 @@ class ReuseExecutor:
         if self._guard is not None:
             self._guard.check_values(a_values, b_values, self.validate_mode,
                                      batched=True)
-        if self.watchdog is None:
-            return _apply_batched(self.plan, a_values, b_values,
-                                  a_axis=a_axis, b_axis=b_axis)
-        with self.watchdog.step(DISPATCH_COUNTS["apply"]
-                                + DISPATCH_COUNTS["apply_batched"]):
-            out = _apply_batched(self.plan, a_values, b_values,
-                                 a_axis=a_axis, b_axis=b_axis)
-            return jax.block_until_ready(out)
+        batch = a_values.shape[0] if a_axis == 0 else b_values.shape[0]
+        # batched replay is always the XLA vmap formulation (module docstring)
+        with obs_trace.span("numeric.dispatch", kernel="xla",
+                            site="executor", batch=batch):
+            if self.watchdog is None:
+                return _apply_batched(self.plan, a_values, b_values,
+                                      a_axis=a_axis, b_axis=b_axis)
+            with self.watchdog.step(DISPATCH_COUNTS["apply"]
+                                    + DISPATCH_COUNTS["apply_batched"]):
+                out = _apply_batched(self.plan, a_values, b_values,
+                                     a_axis=a_axis, b_axis=b_axis)
+                return jax.block_until_ready(out)
 
     def to_csr(self, values: jax.Array) -> CSR:
         """Wrap one replay's values in the plan's C structure."""

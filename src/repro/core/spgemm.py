@@ -76,6 +76,7 @@ from repro.core.compression import (
 )
 from repro.core.meta import DEFAULT_PAD_POLICY, round_capacity
 from repro.core.utils import popcount, segmented_scan, segment_ends
+from repro.obs.trace import span, trace_scope
 from repro.sparse.formats import CSR, csr_row_ids
 
 # Retrace telemetry: each jitted stage bumps its counter at *trace* time only,
@@ -596,9 +597,11 @@ def resolve_plan(a: CSR, b: CSR, fm_cap: int, policy: str, cache, key=None):
         plan = cache.get(key)
         if plan is not None:
             return plan, "hit", key
-    sx = expand_and_sort(a, b, fm_cap)
-    nnz_cap = round_capacity(int(jnp.sum(sx.row_sizes)), policy)
-    plan = plan_from_sorted(sx, b.k, nnz_cap)
+    with span("plan.build", structure_key=key, fm_cap=fm_cap) as sp:
+        sx = expand_and_sort(a, b, fm_cap)
+        nnz_cap = round_capacity(int(jnp.sum(sx.row_sizes)), policy)
+        sp.set("nnz_cap", nnz_cap)
+        plan = plan_from_sorted(sx, b.k, nnz_cap)
     if cache is None:
         return plan, "bypass", key
     cache.put(key, plan)
@@ -645,7 +648,8 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
            tune: str | None = None,
            mesh=None, mesh_axis: str = "data",
            b_placement: str = "replicated",
-           validate: str | None = None) -> SpgemmResult:
+           validate: str | None = None,
+           trace: str | bool | None = None) -> SpgemmResult:
     """Full two-phase SpGEMM with the KKSPGEMM meta-algorithm's method choice
     (see core/meta.py for the heuristics).
 
@@ -701,6 +705,17 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     advisory there, and KKDENSE has no replay to re-dispatch); method="lp"
     rejects it (lp *is* an explicit backend pin); mesh= rejects it (the
     sharded replay is XLA-only, see ROADMAP).
+
+    trace: None (default) | bool | "off" | "on" | "xprof" — phase tracing for
+        this call (``repro.obs``): "on" records nesting spans
+        (``spgemm.prepare``, ``plan.build``, ``numeric.dispatch``, ...) for
+        Chrome trace-event export and feeds the per-phase latency histograms;
+        "xprof" additionally wraps each span in
+        ``jax.profiler.TraceAnnotation``. ``None`` defers to the ambient mode
+        (ultimately ``$REPRO_TRACE``, mirroring how ``validate=None`` defers
+        to ``$REPRO_VALIDATE``). "off" pins tracing off for this call; the
+        untraced path is dispatch-identical (telemetry-asserted in
+        tests/test_obs.py).
     """
     from repro.core import autotune  # cycle-free
     from repro.core.meta import choose_kernel, choose_method  # cycle-free
@@ -708,6 +723,15 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
 
     from repro.runtime.validate import check_csr, resolve_mode  # cycle-free
 
+    if trace is not None:
+        # Pin the trace mode for this call's full extent, then re-enter with
+        # trace=None so the body below runs unchanged under the pinned scope.
+        with trace_scope(trace):
+            return spgemm(a, b, method=method, compress=compress,
+                          pad_policy=pad_policy, plan_cache=plan_cache,
+                          tune=tune, mesh=mesh, mesh_axis=mesh_axis,
+                          b_placement=b_placement, validate=validate,
+                          trace=None)
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
     if method not in ("auto", "dense", "sparse", "lp"):
         raise ValueError(
@@ -750,7 +774,9 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     stats["method"] = method
 
     if method == "dense":
-        sizes, sym_stats = symbolic(a, b, compress=compress, pad_policy=policy)
+        with span("spgemm.symbolic", method="dense"):
+            sizes, sym_stats = symbolic(a, b, compress=compress,
+                                        pad_policy=policy)
         stats.update(sym_stats)
         stats["kernel"] = choose_kernel(a, b, stats)  # advisory telemetry
         fm_cap = round_capacity(sym_stats["fm"], policy)
@@ -760,7 +786,8 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         stats["nnz_c"] = nnz
         stats["nnz_cap"] = nnz_cap
         stats["cache"] = "bypass"
-        c = numeric_dense_acc(a, b, fm_cap, nnz_cap)
+        with span("numeric.dispatch", kernel="dense_acc", method="dense"):
+            c = numeric_dense_acc(a, b, fm_cap, nnz_cap)
         return SpgemmResult(c=c, plan=None, stats=stats)
 
     # "sparse"/"lp": single-expansion pipeline through the plan cache. Bucket
@@ -773,7 +800,8 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         cache = None
     else:
         cache = plan_cache
-    a, b, fm, maxrf, fm_cap = prepare_sparse_inputs(a, b, policy)
+    with span("spgemm.prepare", pad_policy=policy):
+        a, b, fm, maxrf, fm_cap = prepare_sparse_inputs(a, b, policy)
     stats["fm"] = fm
     stats["maxrf"] = maxrf
     stats["fm_cap"] = fm_cap
@@ -782,8 +810,10 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     plan, cache_state, skey = resolve_plan(a, b, fm_cap, policy, cache)
     stats["structure_key"] = skey
     if method == "lp":
-        values, stats["lp_backend"] = lp_replay_values(
-            plan, a.values, b.values)
+        with span("numeric.dispatch", method="lp") as sp:
+            values, stats["lp_backend"] = lp_replay_values(
+                plan, a.values, b.values)
+            sp.set("kernel", stats["lp_backend"])
         stats["replay_backend"] = stats["lp_backend"]
         if stats["lp_backend"] == "xla":
             # host-side bump (trace-time bumps are unreliable): the f32-
@@ -792,11 +822,14 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
 
             FALLBACK_COUNTS["dtype:lp->xla"] += 1
     elif tune == "measure":
-        values, winner = _measured_replay(plan, a, b, cache, skey)
+        with span("numeric.dispatch", method="measure") as sp:
+            values, winner = _measured_replay(plan, a, b, cache, skey)
+            sp.set("kernel", winner)
         stats["replay_backend"] = winner
         stats["kernel_source"] = "measured"  # overrides choose_kernel's
     else:
-        values = numeric_reuse(plan, a.values, b.values)
+        with span("numeric.dispatch", kernel="xla", method=method):
+            values = numeric_reuse(plan, a.values, b.values)
         stats["replay_backend"] = "xla"
     c = CSR(indptr=plan.indptr, indices=plan.indices, values=values,
             shape=(a.m, b.k))

@@ -100,6 +100,28 @@ def snapshot() -> dict[str, dict[str, int]]:
     return {name: dict(c) for name, c in ALL_COUNTERS.items()}
 
 
+def diff(before: dict[str, dict[str, int]],
+         after: dict[str, dict[str, int]]) -> dict[str, dict[str, int]]:
+    """Nonzero deltas between two ``snapshot()``s, same nested shape.
+
+    Groups with no change are omitted entirely, so "this region bumped
+    nothing" is the single assertion ``assert not telemetry.diff(a, b)`` —
+    and "this region added exactly one structure hash" is
+    ``diff(a, b) == {"hash": {"structure_key": 1}}``. Keys that vanished
+    between snapshots (a reset mid-region) show up as negative deltas.
+    """
+    out: dict[str, dict[str, int]] = {}
+    for group in before.keys() | after.keys():
+        b = before.get(group, {})
+        a = after.get(group, {})
+        deltas = {key: a.get(key, 0) - b.get(key, 0)
+                  for key in b.keys() | a.keys()
+                  if a.get(key, 0) != b.get(key, 0)}
+        if deltas:
+            out[group] = deltas
+    return out
+
+
 def reset_all() -> None:
     """Clear every registered telemetry counter."""
     for reset in _RESETS:

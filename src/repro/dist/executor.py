@@ -47,6 +47,7 @@ from repro.core.spgemm import (
 )
 from repro.dist.plan import B_PLACEMENTS, ShardedPlan, build_sharded_plan
 from repro.dist.plan_cache import default_dist_plan_cache, dist_plan_key
+from repro.obs import trace as obs_trace
 from repro.runtime.validate import (PlanMismatchError, SpgemmInputError,
                                     check_csr, resolve_mode)
 from repro.sparse.formats import CSR
@@ -289,7 +290,9 @@ class ShardedReuseExecutor:
         DISPATCH_COUNTS["dist_apply"] += 1
         if self.validate_mode != "off":
             self._check_values(a_values, b_values, batched=False)
-        return self._replay(a_values, b_values, None, None)
+        with obs_trace.span("dist.replay", placement=self.b_placement,
+                            shards=self.num_shards):
+            return self._replay(a_values, b_values, None, None)
 
     def apply_batched(self, a_values: jax.Array,
                       b_values: jax.Array) -> jax.Array:
@@ -307,7 +310,11 @@ class ShardedReuseExecutor:
                 "operand; use apply() for a single replay")
         if self.validate_mode != "off":
             self._check_values(a_values, b_values, batched=True)
-        return self._replay(a_values, b_values, a_axis, b_axis)
+        with obs_trace.span("dist.replay", placement=self.b_placement,
+                            shards=self.num_shards,
+                            batch=(a_values.shape[0] if a_axis == 0
+                                   else b_values.shape[0])):
+            return self._replay(a_values, b_values, a_axis, b_axis)
 
     def to_sharded_csr(self, values: jax.Array) -> ShardedCSR:
         """Wrap one replay's (S, nnz_cap) values in the plan's C structure."""

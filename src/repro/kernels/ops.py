@@ -203,23 +203,38 @@ def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
     if "xla" not in ladder:
         ladder.append("xla")
 
+    from repro.obs import trace as obs_trace  # stdlib-only module, cheap
+
     for i, kname in enumerate(ladder):
         try:
-            out = run(kname)
+            with obs_trace.span("numeric.kernel", kernel=kname, rung=i):
+                out = run(kname)
         except SpgemmError:
             raise  # typed validation errors are not kernel failures
         except Exception as e:
+            from repro.obs import recorder  # lazy: failure path only
+
             if on_kernel_failure == "raise":
-                raise KernelFallbackError(
+                err = KernelFallbackError(
                     f"numeric kernel {kname!r} failed and "
-                    f"on_kernel_failure='raise'") from e
+                    f"on_kernel_failure='raise'")
+                recorder.note_error(err, kernel=kname, site="numeric_values",
+                                    trace_id=obs_trace.current_trace_id())
+                raise err from e
             if i + 1 >= len(ladder):
-                raise KernelFallbackError(
+                err = KernelFallbackError(
                     "numeric kernel ladder exhausted "
-                    f"({' -> '.join(ladder)})") from e
+                    f"({' -> '.join(ladder)})")
+                recorder.note_error(err, kernel=kname, site="numeric_values",
+                                    trace_id=obs_trace.current_trace_id())
+                raise err from e
             from repro.core.telemetry import FALLBACK_COUNTS  # lazy: cycle
 
             FALLBACK_COUNTS[f"fault:{kname}->{ladder[i + 1]}"] += 1
+            recorder.record("fallback", kernel=kname,
+                            fallback=f"{kname}->{ladder[i + 1]}",
+                            verdict="fallback", site="numeric_values",
+                            trace_id=obs_trace.current_trace_id())
             continue
         KERNEL_COUNTS[kname] += 1
         return out

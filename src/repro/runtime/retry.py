@@ -102,6 +102,12 @@ def retry_call(fn: Callable, *args,
                 on_retry(attempt, e, delay)
             sleep(delay)
     RETRY_COUNTS[f"{label}:giveup"] += 1
-    raise RetryExhaustedError(
+    err = RetryExhaustedError(
         f"gave up after {retries + 1} attempts: {last!r}",
-        attempts=retries + 1, last_error=last) from last
+        attempts=retries + 1, last_error=last)
+    from repro.obs import recorder, trace  # lazy: give-up path only
+
+    recorder.note_error(err, site="retry", label=label,
+                        attempts=retries + 1,
+                        trace_id=trace.current_trace_id())
+    raise err from last

@@ -41,6 +41,13 @@ class Heartbeat:
         self._thread: threading.Thread | None = None
 
     def start(self):
+        # Live visibility (PR 9): a dying disk should show up in a metrics
+        # scrape mid-run, not only at stop(). The gauge reads the counter
+        # through a callback, so every export sees the current value.
+        from repro.obs import metrics  # lazy: keep runtime import-light
+
+        metrics.default_registry().gauge(
+            "heartbeat.write_errors", fn=lambda: self.write_errors)
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
         return self

@@ -65,6 +65,9 @@ from repro.core.executor import BACKENDS, ReuseExecutor
 from repro.core.meta import DEFAULT_PAD_POLICY
 from repro.core.plan_cache import PlanCache, structure_key
 from repro.core.spgemm import prepare_sparse_inputs, resolve_plan
+from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
+from repro.obs import trace as obs_trace
 from repro.runtime.retry import retry_call
 from repro.runtime.validate import (AdmissionRejected, DeadlineExceeded,
                                     KernelFallbackError, SpgemmError,
@@ -84,13 +87,18 @@ class SparseResponse:
     Exactly one of ``value`` (a CSR product) / ``error`` (a typed
     ``SpgemmError``) is set once ``done``. ``backend``/``group_size``/
     ``degraded`` record how the dispatch ran (None/0/False for rejected
-    requests that never dispatched).
+    requests that never dispatched). ``trace_id`` is the request's identity
+    in the observability layer: every span the dispatch path opens for this
+    request (admission, grouping, plan build, executor dispatch, retries)
+    carries it, so an exported Chrome trace can be filtered to one request
+    end-to-end.
     """
 
     request_id: int
     submitted_at: float
     priority: int = 0
     deadline_s: float | None = None
+    trace_id: str | None = None
     done: bool = False
     value: CSR | None = None
     error: Exception | None = None
@@ -198,8 +206,13 @@ class SparseService:
         self._queue: list[_Pending] = []
         self._executors: OrderedDict[str, ReuseExecutor] = OrderedDict()
         self._seq = 0
-        self._ewma_step_s: float | None = None
-        self._latencies_s: list[float] = []
+        # Per-service latency distributions (PR 9): "serve.step" (batch-loop
+        # tick) and "serve.request" (admission->completion). The step
+        # histogram's median replaces the old single-EWMA wait estimator;
+        # step_hint_s seeds the estimator before the first step lands (and is
+        # what tests/benchmarks set to pin admission behavior).
+        self.metrics = obs_metrics.MetricsRegistry(name="serve")
+        self.step_hint_s: float | None = None
         self.counters = {
             "submitted": 0, "admitted": 0, "completed": 0, "failed": 0,
             "shed_queue_full": 0, "shed_deadline_infeasible": 0,
@@ -215,14 +228,24 @@ class SparseService:
     def queue_depth(self) -> int:
         return len(self._queue)
 
+    def _est_step_s(self) -> float | None:
+        """Current step-latency estimate: the measured ``serve.step``
+        histogram's median once real steps landed, else ``step_hint_s``
+        (a caller-provided seed), else None (no information yet)."""
+        h = self.metrics.histogram("serve.step")
+        if h.count > 0:
+            return h.percentile(50.0)
+        return self.step_hint_s
+
     def _est_wait_s(self) -> float:
-        """Predicted queue wait for a request admitted right now: measured
-        EWMA step latency x the number of batch ticks ahead of it. Zero
-        until the first step lands (an idle service admits everything)."""
-        if self._ewma_step_s is None:
+        """Predicted queue wait for a request admitted right now: estimated
+        step latency x the number of batch ticks ahead of it. Zero until the
+        first step lands (an idle service admits everything)."""
+        est = self._est_step_s()
+        if est is None:
             return 0.0
         ticks = math.ceil((len(self._queue) + 1) / self.max_batch)
-        return ticks * self._ewma_step_s
+        return ticks * est
 
     def _reject(self, resp: SparseResponse, err: SpgemmError,
                 reason: str) -> SparseResponse:
@@ -244,9 +267,20 @@ class SparseService:
         """
         now = self.clock()
         resp = SparseResponse(request_id=self._seq, submitted_at=now,
-                              priority=priority, deadline_s=deadline_s)
+                              priority=priority, deadline_s=deadline_s,
+                              trace_id=f"req-{self._seq}")
         self._seq += 1
         self.counters["submitted"] += 1
+        if not obs_trace.enabled():
+            return self._admit(a, b, resp, deadline_s, now)
+        with obs_trace.trace_context(resp.trace_id):
+            with obs_trace.span("serve.admit", request_id=resp.request_id):
+                return self._admit(a, b, resp, deadline_s, now)
+
+    def _admit(self, a: CSR, b: CSR, resp: SparseResponse,
+               deadline_s: float | None, now: float) -> SparseResponse:
+        """Admission proper (validation, prep, feasibility, enqueue) — split
+        out of ``submit`` so tracing can wrap it without touching it."""
         if len(self._queue) >= self.max_queue:
             return self._reject(resp, AdmissionRejected(
                 f"admission queue full ({self.max_queue} pending): "
@@ -273,7 +307,7 @@ class SparseService:
         self.traffic_log.record_prepared(skey, pa, pb, fm_cap)
         self._queue.append(_Pending(
             seq=resp.request_id, a=pa, b=pb, fm_cap=fm_cap, skey=skey,
-            priority=priority,
+            priority=resp.priority,
             deadline=None if deadline_s is None else now + deadline_s,
             response=resp))
         self.counters["admitted"] += 1
@@ -296,7 +330,7 @@ class SparseService:
         r.degraded = degraded
         if error is None:
             self.counters["completed"] += 1
-            self._latencies_s.append(r.latency_s)
+            self.metrics.observe("serve.request", r.latency_s)
         else:
             self.counters["failed"] += 1
 
@@ -321,7 +355,23 @@ class SparseService:
 
     def _dispatch_group(self, items: list[_Pending]) -> None:
         """One structure+dtype group -> ONE device dispatch (plus ladder /
-        retry re-dispatches), under breaker routing for singletons."""
+        retry re-dispatches), under breaker routing for singletons.
+
+        Tracing: the group dispatch runs under the requests' trace IDs
+        (``trace_context``), so the nested ``plan.build`` /
+        ``numeric.dispatch`` / retry spans — and the flight-recorder events
+        they leave — are attributable to the admitted requests end-to-end.
+        """
+        if not obs_trace.enabled():
+            return self._dispatch_group_inner(items, None)
+        tids = [p.response.trace_id for p in items]
+        with obs_trace.trace_context(
+                tids[0] if len(tids) == 1 else "+".join(tids)):
+            with obs_trace.span("serve.dispatch", group=len(items),
+                                structure_key=items[0].skey) as sp:
+                return self._dispatch_group_inner(items, sp)
+
+    def _dispatch_group_inner(self, items: list[_Pending], sp) -> None:
         ex = self._executor_for(items[0])
         breaker = None
         backend = "xla"
@@ -331,6 +381,8 @@ class SparseService:
         took_fast = breaker is not None and backend == self.fast_backend
         ex.backend = backend
         ex.kernel_source = "static"
+        if sp is not None:
+            sp.set("kernel", backend)
 
         def dispatch():
             if len(items) == 1:
@@ -366,6 +418,8 @@ class SparseService:
         degraded = ex.kernel_source == "fallback"
         if degraded:
             self.counters["degraded_dispatches"] += 1
+            if sp is not None:
+                sp.set("fallback", f"{backend}->xla")
         if took_fast:
             (breaker.record_failure if degraded
              else breaker.record_success)()
@@ -408,8 +462,7 @@ class SparseService:
             self._dispatch_group(items)
             resolved += len(items)
         step_s = self.clock() - t0
-        self._ewma_step_s = (step_s if self._ewma_step_s is None
-                             else 0.8 * self._ewma_step_s + 0.2 * step_s)
+        self.metrics.observe("serve.step", step_s)
         return resolved
 
     def drain(self, max_steps: int | None = None) -> int:
@@ -434,26 +487,35 @@ class SparseService:
                                limit=limit)
 
     def latency_percentiles(self, qs=(50.0, 99.0)) -> dict[str, float]:
-        """{"p50": s, "p99": s, ...} over completed-request latencies."""
-        if not self._latencies_s:
-            return {f"p{q:g}": float("nan") for q in qs}
-        import numpy as np
+        """{"p50": s, "p99": s, ...} over completed-request latencies (the
+        ``serve.request`` histogram — log-bucketed, interpolated)."""
+        h = self.metrics.histogram("serve.request")
+        return {f"p{q:g}": h.percentile(q) for q in qs}
 
-        arr = np.asarray(self._latencies_s)
-        return {f"p{q:g}": float(np.percentile(arr, q)) for q in qs}
+    def stats(self, debug: bool = False) -> dict:
+        """Service counters + distributions (+ forensics with debug=True).
 
-    def stats(self) -> dict:
+        ``step_latency`` / ``request_latency`` are real histogram summaries
+        (count/mean/p50/p95/p99/min/max) — what replaced the old single
+        EWMA; ``est_step_s`` is the admission estimator's current value.
+        ``debug=True`` additionally dumps the flight recorder (the last-N
+        dispatch events — kernels, fallback hops, errors) and the service's
+        full metrics snapshot, the first thing to pull on a sick service.
+        """
         from repro.core.telemetry import RETRY_COUNTS
 
         total = self.counters["submitted"]
         shed = (self.counters["shed_queue_full"]
                 + self.counters["shed_deadline_infeasible"]
                 + self.counters["shed_deadline_expired"])
-        return {
+        out = {
             **self.counters,
             "queue_depth": len(self._queue),
             "executors": len(self._executors),
-            "ewma_step_s": self._ewma_step_s,
+            "est_step_s": self._est_step_s(),
+            "step_latency": self.metrics.histogram("serve.step").summary(),
+            "request_latency":
+                self.metrics.histogram("serve.request").summary(),
             "shed_rate": (shed / total) if total else 0.0,
             "plan_cache": self.plan_cache.stats(),
             "breakers": {n: b.snapshot() for n, b in self._breakers.items()},
@@ -463,3 +525,8 @@ class SparseService:
                 "giveups": RETRY_COUNTS[f"{RETRY_LABEL}:giveup"],
             },
         }
+        if debug:
+            out["flight_recorder"] = obs_recorder.default_recorder().dump(
+                reason="stats(debug=True)")
+            out["metrics"] = self.metrics.snapshot()
+        return out

@@ -36,14 +36,17 @@ def _reset_telemetry():
     """Per-test telemetry + tuner isolation: every counter starts at zero
     and no fitted table / measured winner leaks across tests (the tuner
     registries are process-global). Lazy imports keep collection cheap."""
+    from repro import obs
     from repro.core import autotune, telemetry
     from repro.runtime import faults
 
     telemetry.reset_all()
     autotune.reset_tuner()
     faults.reset_failpoints()
+    obs.reset_obs()
     yield
     faults.reset_failpoints()  # an armed failpoint must never leak forward
+    obs.reset_obs()  # enabled tracing / ring contents must not leak either
 
 
 @pytest.fixture(autouse=True, scope="module")

@@ -16,18 +16,15 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    HASH_COUNTS,
     DISPATCH_COUNTS,
     PlanCache,
     ReuseExecutor,
     numeric_reuse,
     reset_dispatch_counts,
-    reset_hash_counts,
-    reset_trace_counts,
     spgemm,
     spgemm_grouped,
 )
-from repro.core.spgemm import TRACE_COUNTS, _repad_csr, expand_products
+from repro.core.spgemm import _repad_csr, expand_products
 from repro.kernels import ref, segsum_reuse, segsum_reuse_arrays
 from repro.sparse import CSR, dense_spgemm_oracle, galerkin_triple, random_csr
 
@@ -91,20 +88,23 @@ def test_numeric_reuse_mixed_dtype_accumulates_in_result_type():
 def test_executor_apply_zero_retraces_zero_rehashes():
     """Acceptance: after the first apply, repeated replays on a pinned plan
     trigger zero retraces of ANY jitted stage and zero structure hashes."""
+    from repro.core import telemetry
+
     jax.clear_caches()
     a = random_csr(48, 48, 4.0, 11)
     b = random_csr(48, 48, 3.0, 12)
     ex = ReuseExecutor.from_matrices(a, b, plan_cache=PlanCache())
     ex.apply(a.values, b.values)  # warm the dispatch
-    reset_trace_counts()
-    reset_hash_counts()
+    before = telemetry.snapshot()
     rng = np.random.default_rng(0)
     for _ in range(10):
         av = jnp.asarray(rng.standard_normal(a.nnz_cap), jnp.float32)
         bv = jnp.asarray(rng.standard_normal(b.nnz_cap), jnp.float32)
         jax.block_until_ready(ex.apply(av, bv))
-    assert sum(TRACE_COUNTS.values()) == 0  # zero retraces
-    assert sum(HASH_COUNTS.values()) == 0  # zero structure re-hashes
+    delta = telemetry.diff(before, telemetry.snapshot())
+    assert "trace" not in delta, delta  # zero retraces
+    assert "hash" not in delta, delta  # zero structure re-hashes
+    assert delta == {"dispatch": {"apply": 10}}, delta  # ...and nothing else
 
 
 def test_apply_batched_matches_per_call_loop_bitwise():

@@ -80,7 +80,7 @@ def test_infeasible_deadline_shed_at_admission(ab):
     a, b = ab
     clk = FakeClock()
     svc = SparseService(clock=clk)
-    svc._ewma_step_s = 1.0  # as if measured: one tick costs 1s
+    svc.step_hint_s = 1.0  # as if measured: one tick costs 1s
     r = svc.submit(a, b, deadline_s=0.5)
     assert r.done and isinstance(r.error, AdmissionRejected)
     assert "infeasible" in str(r.error)
@@ -404,14 +404,15 @@ def test_service_warms_from_its_own_traffic(ab):
 
 
 def test_admission_records_traffic_without_extra_hash(ab):
-    from repro.core.plan_cache import HASH_COUNTS
+    from repro.core import telemetry
 
     a, b = ab
     svc = SparseService()
     svc.submit(a, b)
-    hashes = HASH_COUNTS["structure_key"]
+    before = telemetry.snapshot()
     svc.submit(a, b)  # second request: still exactly one hash each
-    assert HASH_COUNTS["structure_key"] == hashes + 1
+    delta = telemetry.diff(before, telemetry.snapshot())
+    assert delta.get("hash") == {"structure_key": 1}, delta
     assert svc.traffic_log.top()[0].count == 2
 
 

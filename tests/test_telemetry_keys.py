@@ -1,0 +1,158 @@
+"""One test per documented telemetry key family (core/telemetry.py).
+
+The key conventions in telemetry.py's comments are load-bearing: dashboards,
+the Prometheus exporter and the serving tier's stats() all parse them. Each
+test here drives the real code path that bumps a family and asserts the
+*exact* key strings, so renaming a key without updating the docs (or vice
+versa) fails loudly.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import telemetry
+from repro.core.executor import ReuseExecutor
+from repro.core.spgemm import numeric_reuse, spgemm
+from repro.kernels.ops import numeric_values
+from repro.runtime import faults
+from repro.runtime.retry import RetryExhaustedError, retry_call
+from repro.serve.breaker import CircuitBreaker
+from repro.sparse import CSR, csr_to_ell, random_csr
+
+
+@pytest.fixture
+def ab():
+    return random_csr(32, 24, 4.0, seed=1), random_csr(24, 40, 4.0, seed=2)
+
+
+def _int_operands():
+    a = random_csr(24, 16, 3.0, seed=5)
+    b = random_csr(16, 20, 3.0, seed=6)
+    to_int = lambda m: CSR(indptr=m.indptr, indices=m.indices,
+                           values=jnp.ones_like(m.values, jnp.int32),
+                           shape=m.shape)
+    return to_int(a), to_int(b)
+
+
+# --------------------------------------------------------------------------
+# "fault:<kernel>-><next>" — degradation-ladder step after a kernel fault
+# --------------------------------------------------------------------------
+
+
+def test_fault_key_names_both_kernels_of_the_hop(ab):
+    a, b = ab
+    ex = ReuseExecutor.from_matrices(a, b, backend="pallas")
+    oracle = numeric_reuse(ex.plan, a.values, b.values)
+    with faults.failpoint("kernel:pallas"):
+        out = ex.apply(a.values, b.values)
+    assert bool(jnp.all(out == oracle))
+    assert ex.kernel_source == "fallback"
+    assert telemetry.FALLBACK_COUNTS["fault:pallas->xla"] == 1
+    # exactly one fault key, and it encodes <from>-><to>, nothing else
+    fault_keys = [k for k in telemetry.FALLBACK_COUNTS if k.startswith("fault:")]
+    assert fault_keys == ["fault:pallas->xla"]
+
+
+# --------------------------------------------------------------------------
+# "dtype:<site>->xla" — f32-accumulation guard, one key per entry point
+# --------------------------------------------------------------------------
+
+
+def test_dtype_keys_cover_all_three_sites():
+    a, b = _int_operands()
+    spgemm(a, b, method="lp")
+    ReuseExecutor.from_matrices(a, b, backend="pallas_lp").apply(
+        a.values, b.values)
+    res = spgemm(a, b, method="sparse")
+    c_ell = csr_to_ell(res.c)
+    numeric_values(a, b, c_ell.indices, c_ell.row_nnz, kernel="auto")
+    dtype_keys = sorted(k for k in telemetry.FALLBACK_COUNTS
+                        if k.startswith("dtype:"))
+    assert dtype_keys == ["dtype:executor->xla", "dtype:lp->xla",
+                          "dtype:numeric_auto->xla"]
+
+
+# --------------------------------------------------------------------------
+# "nan_guard:rerun/recovered/data" — NaN-guard verdict triplet
+# --------------------------------------------------------------------------
+
+
+def test_nan_guard_keys_rerun_recovered_and_data(ab):
+    a, b = ab
+    ex = ReuseExecutor.from_matrices(a, b, nan_guard=True)
+    with faults.failpoint("executor:poison_output"):
+        ex.apply(a.values, b.values)
+    assert telemetry.FALLBACK_COUNTS["nan_guard:rerun"] == 1
+    assert telemetry.FALLBACK_COUNTS["nan_guard:recovered"] == 1
+    assert telemetry.FALLBACK_COUNTS["nan_guard:data"] == 0
+
+    bad = faults.inject_csr("nan_values", a)
+    ex.apply(bad.values, b.values)
+    assert telemetry.FALLBACK_COUNTS["nan_guard:rerun"] == 2
+    assert telemetry.FALLBACK_COUNTS["nan_guard:data"] == 1
+    # recovered did NOT move: a data NaN is flagged, never "recovered"
+    assert telemetry.FALLBACK_COUNTS["nan_guard:recovered"] == 1
+
+
+# --------------------------------------------------------------------------
+# "<label>:attempt/retry/giveup" — retry_call accounting
+# --------------------------------------------------------------------------
+
+
+def test_retry_keys_attempt_retry_giveup():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_call(flaky, retries=3, sleep=lambda _: None,
+                      label="keytest") == "ok"
+    assert telemetry.RETRY_COUNTS["keytest:attempt"] == 3
+    assert telemetry.RETRY_COUNTS["keytest:retry"] == 2
+    assert telemetry.RETRY_COUNTS["keytest:giveup"] == 0
+
+    def doomed():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RetryExhaustedError):
+        retry_call(doomed, retries=1, sleep=lambda _: None, label="keytest")
+    assert telemetry.RETRY_COUNTS["keytest:attempt"] == 5
+    assert telemetry.RETRY_COUNTS["keytest:retry"] == 3
+    assert telemetry.RETRY_COUNTS["keytest:giveup"] == 1
+
+
+# --------------------------------------------------------------------------
+# "<name>:open/half_open/close/reopen/short_circuit" — breaker transitions
+# --------------------------------------------------------------------------
+
+
+def test_breaker_keys_all_five_transitions():
+    t = {"now": 0.0}
+    br = CircuitBreaker("keybrk", failure_threshold=2, window_s=30.0,
+                        cooldown_s=5.0, clock=lambda: t["now"])
+
+    br.record_failure()
+    br.record_failure()                       # threshold hit -> open
+    assert telemetry.BREAKER_COUNTS["keybrk:open"] == 1
+
+    assert br.allow() is False                # still cooling -> short_circuit
+    assert telemetry.BREAKER_COUNTS["keybrk:short_circuit"] == 1
+
+    t["now"] += 5.0                           # cooldown elapsed -> half_open
+    assert br.allow() is True                 # the probe
+    assert telemetry.BREAKER_COUNTS["keybrk:half_open"] == 1
+
+    br.record_failure()                       # probe failed -> reopen
+    assert telemetry.BREAKER_COUNTS["keybrk:reopen"] == 1
+
+    t["now"] += 5.0
+    assert br.allow() is True                 # half_open again, second probe
+    br.record_success()                       # probe succeeded -> close
+    assert telemetry.BREAKER_COUNTS["keybrk:close"] == 1
+
+    assert sorted(telemetry.BREAKER_COUNTS) == [
+        "keybrk:close", "keybrk:half_open", "keybrk:open",
+        "keybrk:reopen", "keybrk:short_circuit"]
+    assert telemetry.BREAKER_COUNTS["keybrk:half_open"] == 2
