@@ -1,0 +1,48 @@
+"""repro.analysis — static contract linter for the SpGEMM stack.
+
+Nine PRs of growth encoded this repo's load-bearing invariants as prose:
+"failures are caught *outside* jit so a failed trace is never cached",
+"off means off: dispatch-identical", documented counter-key grammars, a
+fixed span taxonomy, env-var resolution confined to two call sites. This
+package turns that prose into an AST pass that fails CI the moment a new
+call site drifts (see ROADMAP "The analysis layer").
+
+Pieces:
+
+  * :mod:`repro.analysis.context`  — parsed-module project model + the
+    machine-readable registries (``SPAN_NAMES``, ``KEY_FAMILIES``,
+    ``ALL_COUNTERS``, the typed taxonomy) read *statically* from the tree
+    under scan, so fixture trees lint exactly like the real package;
+  * :mod:`repro.analysis.registry` — the rule registry (``@rule``);
+  * ``rules_*`` modules            — one module per shipped rule;
+  * :mod:`repro.analysis.runner`   — ``run_analysis``: scan + suppression
+    (``# repro: allow[RULE]``) + committed-baseline filtering;
+  * :mod:`repro.analysis.cli`      — ``python -m repro.analysis`` (exit 0
+    iff no *new* findings; ``--json`` report artifact for CI).
+"""
+from repro.analysis.findings import Finding, Report
+from repro.analysis.registry import RULES, all_rule_ids, rule
+from repro.analysis.runner import run_analysis
+
+# rule modules self-register on import; keep after registry import
+from repro.analysis import (  # noqa: E402  (registration side effects)
+    rules_env,
+    rules_jit,
+    rules_spans,
+    rules_taxonomy,
+    rules_telemetry,
+)
+
+__all__ = [
+    "Finding",
+    "Report",
+    "RULES",
+    "all_rule_ids",
+    "rule",
+    "run_analysis",
+    "rules_env",
+    "rules_jit",
+    "rules_spans",
+    "rules_taxonomy",
+    "rules_telemetry",
+]

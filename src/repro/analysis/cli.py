@@ -1,0 +1,106 @@
+"""CLI for the contract linter: ``python -m repro.analysis``.
+
+Exit status is the gate: 0 when no *new* findings (suppressed and
+baselined ones are reported but pass), 1 otherwise. CI runs this with
+``--json`` and uploads the report as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.context import default_root
+from repro.analysis.findings import save_baseline
+from repro.analysis.registry import RULES, all_rule_ids
+from repro.analysis.runner import run_analysis
+
+# repo-root/analysis/baseline.json (cli.py lives at src/repro/analysis/)
+DEFAULT_BASELINE = Path(__file__).resolve().parents[3] / "analysis" / "baseline.json"
+
+EPILOG = """\
+suppression:
+  inline   # repro: allow[RULE] <why>      on the flagged line or the line
+           above; RULE is a rule id (taxonomy), a sub-check code
+           (taxonomy.broad-except), a comma list, or *.
+  baseline analysis/baseline.json          fingerprints of grandfathered
+           findings (content-hashed: rule|path|normalized line, so line
+           drift does not resurrect them). Refresh with --update-baseline.
+
+exit status: 0 = no new findings, 1 = new findings (or baseline drift).
+"""
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract linter for the SpGEMM stack: "
+                    "jit-boundary, telemetry-key, taxonomy, span, and env "
+                    "discipline (see ROADMAP, 'The analysis layer').",
+        epilog=EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument(
+        "--root", type=Path, default=None,
+        help="package tree to scan (default: the installed repro package)")
+    parser.add_argument(
+        "--rules", nargs="+", metavar="RULE", default=None,
+        help=f"subset of rules to run (default: all of {all_rule_ids()})")
+    parser.add_argument(
+        "--json", type=Path, metavar="PATH", default=None,
+        help="write the full report as JSON to PATH (CI artifact)")
+    parser.add_argument(
+        "--baseline", type=Path, default=DEFAULT_BASELINE,
+        help="baseline file of grandfathered fingerprints "
+             "(default: %(default)s; missing file = empty baseline)")
+    parser.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline to grandfather every current new "
+             "finding, then exit 0")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="list registered rules and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id in all_rule_ids():
+            print(f"{rule_id:15s} {RULES[rule_id].doc}")
+        return 0
+
+    root = args.root if args.root is not None else default_root()
+    report = run_analysis(root, rules=args.rules, baseline_path=args.baseline)
+
+    if args.update_baseline:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        save_baseline(args.baseline, report.new + report.baselined)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(report.new) + len(report.baselined)} findings)")
+        return 0
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(report.to_dict(), fh, indent=2)
+            fh.write("\n")
+
+    for finding in report.new:
+        print(finding.render())
+    for finding in report.suppressed:
+        print(f"{finding.path}:{finding.line}: [{finding.code}] suppressed "
+              f"(inline allow)")
+    for finding in report.baselined:
+        print(f"{finding.path}:{finding.line}: [{finding.code}] baselined")
+
+    counts = (f"{len(report.new)} new, {len(report.suppressed)} suppressed, "
+              f"{len(report.baselined)} baselined")
+    mods = report.stats.get("modules", 0)
+    if report.ok:
+        print(f"repro.analysis: OK — {mods} modules, {counts}")
+        return 0
+    print(f"repro.analysis: FAIL — {mods} modules, {counts}",
+          file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

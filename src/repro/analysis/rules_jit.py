@@ -1,0 +1,249 @@
+"""Rule ``jit-boundary`` — the ladder catches *outside* jit, jit stays pure.
+
+The stack's central execution contract (ROADMAP, "hardened execution"):
+failures must be caught outside ``jax.jit`` so a failed trace is never
+cached, and traced code must never host-sync (that turns one kernel launch
+into a device round-trip per call).
+
+Sub-checks:
+
+  * ``jit-boundary.try-in-traced`` — a ``try`` statement inside a function
+    that is jit/Pallas-traced (directly decorated, wrapped via
+    ``jax.jit(f)`` / ``pallas_call`` / ``partial``, or reachable by plain
+    call from a traced function in the same module). Exceptions do not
+    propagate out of a trace the way the ladder expects; catch at the
+    dispatch site instead.
+  * ``jit-boundary.host-sync`` — ``np.asarray`` / ``.item()`` /
+    ``.block_until_ready()`` / ``float(...)`` / ``.tolist()`` inside a
+    traced function. These force a device sync (or fail on tracers).
+  * ``jit-boundary.silent-catch`` — an ``except Exception``/bare ``except``
+    whose ``try`` body touches jit machinery (``.lower()``/``.compile()``,
+    a jit-wrapped callable, ``pallas_call``) but whose handler neither
+    re-raises, constructs a typed taxonomy error, nor records telemetry.
+    That swallows a trace failure invisibly — the one thing the degradation
+    ladder exists to make loud.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.asthelpers import (
+    call_name_targets,
+    calls_in,
+    dotted,
+    walk_functions,
+)
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+
+RULE = "jit-boundary"
+
+HOST_SYNC_ATTRS = {"item", "block_until_ready", "tolist"}
+HOST_SYNC_CALLS = {"np.asarray", "numpy.asarray", "jax.device_get"}
+HOST_SYNC_BUILTINS = {"float"}
+
+_TRACE_WRAPPERS = ("jit", "pallas_call")
+
+
+def _is_trace_wrapper(name: str) -> bool:
+    last = name.rsplit(".", 1)[-1]
+    return last in _TRACE_WRAPPERS
+
+
+def _decorator_traced(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _is_trace_wrapper(dotted(target)):
+            return True
+        # functools.partial(jax.jit, ...) as a decorator factory
+        if isinstance(dec, ast.Call):
+            for arg in dec.args:
+                if _is_trace_wrapper(dotted(arg)):
+                    return True
+    return False
+
+
+def traced_functions(mod: ModuleInfo) -> dict[str, ast.FunctionDef | ast.AsyncFunctionDef]:
+    """Name → def for every function in ``mod`` that jit/Pallas traces,
+    including same-module transitive callees (over-approximate on purpose:
+    a helper called from traced code is traced code)."""
+    defs: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
+    for fn in walk_functions(mod.tree):
+        defs.setdefault(fn.name, fn)
+
+    roots: set[str] = set()
+    for name, fn in defs.items():
+        if _decorator_traced(fn):
+            roots.add(name)
+    # f passed into jax.jit(...) / pallas_call(...) anywhere in the module,
+    # including jitted = jax.jit(f) assignments and partial(f, ...) wrapping.
+    for call in calls_in(mod.tree):
+        if _is_trace_wrapper(dotted(call.func)):
+            for target in call_name_targets(call):
+                if target in defs:
+                    roots.add(target)
+
+    # same-module reachability by plain-Name call
+    traced = set(roots)
+    frontier = list(roots)
+    while frontier:
+        fn = defs[frontier.pop()]
+        for call in calls_in(fn):
+            if isinstance(call.func, ast.Name) and call.func.id in defs:
+                callee = call.func.id
+                if callee not in traced:
+                    traced.add(callee)
+                    frontier.append(callee)
+    return {name: defs[name] for name in traced}
+
+
+def _direct_jit_touch(node: ast.AST, jit_names: set[str]) -> bool:
+    """Does ``node`` itself call into jit machinery?"""
+    for call in calls_in(node):
+        name = dotted(call.func)
+        last = name.rsplit(".", 1)[-1]
+        if last in {"lower", "compile"} or _is_trace_wrapper(name):
+            return True
+        if isinstance(call.func, ast.Name) and call.func.id in jit_names:
+            return True
+        # jitted-callable dict dispatch: _apply_donated[key](...)
+        if isinstance(call.func, ast.Subscript):
+            base = dotted(call.func.value)
+            if base in jit_names:
+                return True
+    return False
+
+
+def _jit_touching_functions(mod: ModuleInfo, jit_names: set[str]) -> set[str]:
+    """Functions that touch jit machinery, directly or through same-module
+    callees (a try around ``run_cell(...)`` wraps the compile inside it)."""
+    defs = {fn.name: fn for fn in walk_functions(mod.tree)}
+    touching = {name for name, fn in defs.items()
+                if _direct_jit_touch(fn, jit_names)}
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in defs.items():
+            if name in touching:
+                continue
+            for call in calls_in(fn):
+                if isinstance(call.func, ast.Name) and call.func.id in touching:
+                    touching.add(name)
+                    changed = True
+                    break
+    return touching
+
+
+def _jit_touching(try_body: list[ast.stmt], jit_names: set[str],
+                  touching_fns: set[str]) -> bool:
+    """Does this try body reach jit machinery (directly or one same-module
+    call away)?"""
+    for stmt in try_body:
+        if _direct_jit_touch(stmt, jit_names):
+            return True
+        for call in calls_in(stmt):
+            if isinstance(call.func, ast.Name) and call.func.id in touching_fns:
+                return True
+    return False
+
+
+def _handler_is_loud(handler: ast.ExceptHandler, taxonomy: frozenset[str]) -> bool:
+    """A handler is acceptable when it re-raises, constructs a typed
+    taxonomy error, or records to telemetry (counter augassign,
+    ``recorder.note_error``/``record``, ``_count``)."""
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            last = name.rsplit(".", 1)[-1]
+            if last in taxonomy:
+                return True
+            if last in {"note_error", "record", "_count"}:
+                return True
+        if isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Subscript):
+            base = dotted(node.target.value)
+            if base.endswith("_COUNTS"):
+                return True
+    return False
+
+
+def _broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    names = {dotted(t)} if not isinstance(t, ast.Tuple) else {
+        dotted(e) for e in t.elts}
+    return any(n.rsplit(".", 1)[-1] in {"Exception", "BaseException"}
+               for n in names)
+
+
+@rule(RULE, "failures caught outside jit; no try/host-sync inside traced code")
+def check(project: Project):
+    taxonomy = project.taxonomy_classes()
+    for mod in project.modules:
+        traced = traced_functions(mod)
+
+        # names bound to jitted callables in this module (X = jax.jit(f))
+        jit_names: set[str] = set(traced)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                if _is_trace_wrapper(dotted(node.value.func)):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            jit_names.add(t.id)
+
+        for name, fn in traced.items():
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Try):
+                    finding = Finding(
+                        rule=RULE, code=f"{RULE}.try-in-traced",
+                        path=mod.rel, line=node.lineno,
+                        message=(f"try/except inside jit-traced function "
+                                 f"'{name}' — the degradation ladder must "
+                                 f"catch outside jit so a failed trace is "
+                                 f"never cached"),
+                        hint=("move the try to the dispatch site (see "
+                              "kernels/ops.numeric_values) and keep the "
+                              "traced body pure"),
+                        snippet=mod.snippet(node.lineno))
+                    yield finding
+                if isinstance(node, ast.Call):
+                    cname = dotted(node.func)
+                    last = cname.rsplit(".", 1)[-1]
+                    hit = None
+                    if cname in HOST_SYNC_CALLS:
+                        hit = cname
+                    elif isinstance(node.func, ast.Attribute) and last in HOST_SYNC_ATTRS:
+                        hit = f".{last}()"
+                    elif isinstance(node.func, ast.Name) and last in HOST_SYNC_BUILTINS:
+                        hit = f"{last}()"
+                    if hit:
+                        yield Finding(
+                            rule=RULE, code=f"{RULE}.host-sync",
+                            path=mod.rel, line=node.lineno,
+                            message=(f"host-sync call {hit} inside "
+                                     f"jit-traced function '{name}'"),
+                            hint=("hoist the sync out of the traced body; "
+                                  "pass concrete values in as arguments"),
+                            snippet=mod.snippet(node.lineno))
+
+        touching_fns = _jit_touching_functions(mod, jit_names)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Try):
+                continue
+            if not _jit_touching(node.body, jit_names, touching_fns):
+                continue
+            for handler in node.handlers:
+                if _broad(handler) and not _handler_is_loud(handler, taxonomy):
+                    yield Finding(
+                        rule=RULE, code=f"{RULE}.silent-catch",
+                        path=mod.rel, line=handler.lineno,
+                        message=("broad except around jit-touching code "
+                                 "that neither re-raises typed, constructs "
+                                 "a taxonomy error, nor records telemetry"),
+                        hint=("re-raise a runtime.validate error, bump a "
+                              "telemetry counter, or annotate with "
+                              "# repro: allow[jit-boundary] and a why"),
+                        snippet=mod.snippet(handler.lineno))

@@ -66,7 +66,8 @@ class ModelConfig:
         n_pat = len(self.pattern)
         reps, rem = divmod(self.num_layers - len(self.tail), n_pat)
         if rem:
-            raise ValueError(
+            from repro.runtime.validate import SpgemmConfigError  # cycle-free
+            raise SpgemmConfigError(
                 f"{self.name}: {self.num_layers} layers != "
                 f"{n_pat}*k + {len(self.tail)}"
             )
@@ -117,7 +118,8 @@ class ModelConfig:
                 nheads = d_in // self.ssm_head_dim
                 total += d * (2 * d_in + 2 * self.ssm_state + nheads) + d_in * d
             else:
-                raise ValueError(kind)
+                from repro.runtime.validate import SpgemmConfigError  # cycle-free
+                raise SpgemmConfigError(f"unknown block kind {kind!r}")
         return total
 
     def active_param_count(self) -> int:

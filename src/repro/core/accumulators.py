@@ -115,7 +115,8 @@ def lp_insert(state: LPState, key: jax.Array, val: jax.Array,
     stop at and it would spin forever.
     """
     if not 0.0 < max_occupancy <= 1.0:
-        raise ValueError(
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
             f"max_occupancy must be in (0, 1]; got {max_occupancy!r}")
     size = state.ids.shape[0]
     mask = size - 1
@@ -166,7 +167,9 @@ def accumulate_row(keys: jax.Array, vals: jax.Array, valid: jax.Array,
         l1 = lp_init(l1_cap, vals.dtype)
         insert1 = lp_insert
     else:
-        raise ValueError(kind)
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
+            f"unknown accumulator kind {kind!r}; expected 'll' or 'lp'")
     l2_hash = max(1, l2_cap)
     l2_hash = 1 << (l2_hash - 1).bit_length()  # next pow2
     l2 = ll_init(l2_hash, l2_cap, vals.dtype)

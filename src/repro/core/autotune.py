@@ -73,7 +73,8 @@ _ACTIVE: "TunedThresholds | None" = None
 
 def validate_tune(tune) -> None:
     if tune not in TUNE_MODES:
-        raise ValueError(
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
             f"unknown tune mode {tune!r}; expected one of {TUNE_MODES} "
             f"(None = static/fitted thresholds, 'measure' = first-sight "
             f"micro-bench)")
@@ -188,7 +189,8 @@ class TunedThresholds:
     @classmethod
     def from_json(cls, payload: dict) -> "TunedThresholds":
         if payload.get("kind") != "tuned_thresholds":
-            raise ValueError(
+            from repro.runtime.validate import SpgemmConfigError  # cycle-free
+            raise SpgemmConfigError(
                 "not a tuned_thresholds payload (kind="
                 f"{payload.get('kind')!r}) — pass the JSON written by "
                 "TunedThresholds.save / benchmarks.run --fit-thresholds")
@@ -406,7 +408,9 @@ def measure_candidates(candidates: dict[str, Callable[[], object]], *,
     ``TUNE_COUNTS["micro_bench"]`` once per sweep.
     """
     if not candidates:
-        raise ValueError("measure_candidates needs at least one candidate")
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
+            "measure_candidates needs at least one candidate")
     TUNE_COUNTS["micro_bench"] += 1
     times: dict[str, float] = {}
     for name, fn in candidates.items():

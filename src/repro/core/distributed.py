@@ -306,7 +306,10 @@ def distributed_spgemm(a: CSR, b: CSR, mesh, axis: str = "data",
     elif b_placement == "allgather":
         b_in = partition_rows(b, num, policy)
     else:
-        raise ValueError(b_placement)
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
+            f"unknown b_placement {b_placement!r}; expected 'replicated' "
+            f"or 'allgather'")
 
     fm_cap = shard_fm_cap(a_sh, b, policy)
     sizes = dist_symbolic(a_sh, b_in, mesh, axis, fm_cap)  # (S, m_loc)

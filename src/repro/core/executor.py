@@ -61,6 +61,7 @@ from repro.runtime import faults
 from repro.runtime.validate import (
     KernelFallbackError,
     PlanGuard,
+    SpgemmConfigError,
     SpgemmError,
     check_plan_compat,
     resolve_mode,
@@ -81,7 +82,7 @@ def reset_dispatch_counts() -> None:
 
 def _resolve_backend(backend: str) -> str:
     if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        raise SpgemmConfigError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     # "auto" stays on XLA even on TPU: the Pallas kernel is explicit opt-in
     # until it has real-TPU compile coverage (tests only run interpret mode).
     return "xla" if backend == "auto" else backend
@@ -184,19 +185,19 @@ class ReuseExecutor:
         from repro.core import autotune  # lazy: keep ctor import-light
 
         if plan is None:
-            raise ValueError(
+            raise SpgemmConfigError(
                 "ReuseExecutor needs a SpgemmPlan; got None — the dense "
                 "spgemm method returns plan=None (no Reuse path), build the "
                 "plan with method='sparse'"
             )
         autotune.validate_tune(tune)
         if tune == "measure" and backend != "auto":
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"tune='measure' requires backend='auto' (got "
                 f"backend={backend!r}): measure mode picks the backend "
                 f"empirically, an explicit pin contradicts it")
         if on_kernel_failure not in ("fallback", "raise"):
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"on_kernel_failure must be 'fallback' or 'raise', got "
                 f"{on_kernel_failure!r}")
         self.plan = plan
@@ -319,14 +320,14 @@ class ReuseExecutor:
             self._measure(a_values, b_values)
         if donate:
             if self.nan_guard:
-                raise ValueError(
+                raise SpgemmConfigError(
                     "nan_guard and donate are incompatible: the guard's "
                     "oracle re-run reads the operand buffers after dispatch, "
                     "which donation invalidates")
             key = {True: (True, True), "both": (True, True),
                    "a": (True, False), "b": (False, True)}.get(donate)
             if key is None:
-                raise ValueError(
+                raise SpgemmConfigError(
                     f"donate must be bool, 'a', 'b' or 'both'; got {donate!r}")
             fn = _apply_donated[key]
         else:
@@ -467,7 +468,7 @@ class ReuseExecutor:
         a_axis = 0 if a_values.ndim == 2 else None
         b_axis = 0 if b_values.ndim == 2 else None
         if a_axis is None and b_axis is None:
-            raise ValueError(
+            raise SpgemmConfigError(
                 "apply_batched needs at least one stacked (batch, nnz) operand; "
                 "use apply() for a single replay"
             )
@@ -517,7 +518,7 @@ def spgemm_grouped(pairs: Sequence[tuple[CSR, CSR]], *,
 
     autotune.validate_tune(tune)
     if tune == "measure" and backend != "auto":
-        raise ValueError(
+        raise SpgemmConfigError(
             f"tune='measure' requires backend='auto' (got "
             f"backend={backend!r}): measure mode picks the backend "
             f"empirically, an explicit pin contradicts it")

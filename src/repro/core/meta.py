@@ -67,7 +67,9 @@ def round_capacity(x: int, policy: str = DEFAULT_PAD_POLICY) -> int:
         return max(-(-x // 8) * 8, CAPACITY_FLOOR)
     if policy == "pow2":
         return max(1 << (x - 1).bit_length(), CAPACITY_FLOOR)
-    raise ValueError(f"unknown pad_policy {policy!r}; expected one of {PAD_POLICIES}")
+    from repro.runtime.validate import SpgemmConfigError  # cycle-free
+    raise SpgemmConfigError(
+        f"unknown pad_policy {policy!r}; expected one of {PAD_POLICIES}")
 
 
 def f32_accumulation_ok(a_dtype, b_dtype) -> bool:

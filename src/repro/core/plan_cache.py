@@ -85,10 +85,13 @@ class PlanCache:
 
     def __init__(self, capacity: int = 16, max_bytes: int | None = None,
                  name: str = "plan"):
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        if max_bytes is not None and max_bytes < 1:
-            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        if capacity < 1 or (max_bytes is not None and max_bytes < 1):
+            from repro.runtime.validate import SpgemmConfigError  # cycle-free
+            if capacity < 1:
+                raise SpgemmConfigError(
+                    f"capacity must be >= 1, got {capacity}")
+            raise SpgemmConfigError(
+                f"max_bytes must be >= 1, got {max_bytes}")
         self.capacity = capacity
         self.max_bytes = max_bytes
         self.name = name  # EVICT_COUNTS key; distinguishes cache instances

@@ -721,7 +721,8 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
     from repro.core.meta import choose_kernel, choose_method  # cycle-free
     from repro.core.plan_cache import default_plan_cache
 
-    from repro.runtime.validate import check_csr, resolve_mode  # cycle-free
+    from repro.runtime.validate import (SpgemmConfigError, check_csr,  # cycle-free
+                                        resolve_mode)
 
     if trace is not None:
         # Pin the trace mode for this call's full extent, then re-enter with
@@ -734,7 +735,7 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
                           trace=None)
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
     if method not in ("auto", "dense", "sparse", "lp"):
-        raise ValueError(
+        raise SpgemmConfigError(
             f"unknown method {method!r}; expected 'auto', 'dense', 'sparse' "
             f"or 'lp'")
     autotune.validate_tune(tune)
@@ -743,23 +744,23 @@ def spgemm(a: CSR, b: CSR, method: str = "auto", compress: str = "auto",
         check_csr(a, vmode, name="A")
         check_csr(b, vmode, name="B")
     if tune == "measure" and method == "lp":
-        raise ValueError(
+        raise SpgemmConfigError(
             "tune='measure' does not compose with method='lp': 'lp' pins "
             "the LP-hash kernel explicitly, while measure mode exists to "
             "pick the replay backend empirically — use method='sparse' (or "
             "'auto') with tune='measure'")
     if mesh is not None:
         if tune is not None:
-            raise ValueError(
+            raise SpgemmConfigError(
                 "tune= does not support mesh= yet: the sharded replay runs "
                 "the XLA segment-sum only, so there are no per-shard "
                 "candidates to measure (see ROADMAP)")
         if method == "dense":
-            raise ValueError(
+            raise SpgemmConfigError(
                 "mesh= requires the sparse method: KKDENSE has no "
                 "product->slot map, so it cannot pin a sharded plan")
         if method == "lp":
-            raise ValueError(
+            raise SpgemmConfigError(
                 "mesh= does not support method='lp' yet: the sharded replay "
                 "runs the XLA segment-sum only (see ROADMAP: Pallas path "
                 "under shard_map); use method='sparse' on a mesh")

@@ -69,6 +69,43 @@ def reset_breaker_counts() -> None:
     BREAKER_COUNTS.clear()
 
 
+# Machine-readable key grammars, one family per registered counter. ``{}``
+# is a wildcard segment (kernel names, callsite labels, breaker names).
+# This is the single source of truth the static analyzer
+# (``python -m repro.analysis``, rule ``telemetry-key``) checks every
+# counter-mutation site against — the prose comments above are commentary,
+# this dict is the contract. Extend it in the same commit that introduces
+# a new key shape, or the analysis CI job fails.
+KEY_FAMILIES: dict[str, tuple[str, ...]] = {
+    "trace": ("{}",),
+    "hash": ("structure_key",),
+    "dispatch": ("apply", "apply_batched", "dist_apply", "dist_apply_batched"),
+    "kernel": ("{}",),
+    "tune": ("micro_bench", "bucket_hit", "plan_meta_hit"),
+    "fallback": ("fault:{}->{}", "dtype:{}->xla", "nan_guard:rerun",
+                 "nan_guard:recovered", "nan_guard:data"),
+    "evict": ("{}",),
+    "retry": ("{}:attempt", "{}:retry", "{}:giveup"),
+    "breaker": ("{}:open", "{}:half_open", "{}:close", "{}:reopen",
+                "{}:short_circuit"),
+}
+
+
+def key_matches_family(family: str, key: str) -> bool:
+    """Does ``key`` fit one of ``family``'s grammar templates?
+
+    Runtime twin of the static check, for tests that want to assert a
+    counter key conforms without re-listing the grammar inline.
+    """
+    import re
+    for template in KEY_FAMILIES.get(family, ()):
+        pattern = "^" + ".+".join(
+            re.escape(part) for part in template.split("{}")) + "$"
+        if re.match(pattern, key):
+            return True
+    return False
+
+
 # name -> live Counter object (shared with the owning module, not copies)
 ALL_COUNTERS: dict[str, Counter] = {
     "trace": TRACE_COUNTS,

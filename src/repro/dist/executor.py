@@ -48,7 +48,8 @@ from repro.core.spgemm import (
 from repro.dist.plan import B_PLACEMENTS, ShardedPlan, build_sharded_plan
 from repro.dist.plan_cache import default_dist_plan_cache, dist_plan_key
 from repro.obs import trace as obs_trace
-from repro.runtime.validate import (PlanMismatchError, SpgemmInputError,
+from repro.runtime.validate import (PlanMismatchError, SpgemmConfigError,
+                                    SpgemmInputError,
                                     check_csr, resolve_mode)
 from repro.sparse.formats import CSR
 
@@ -140,11 +141,11 @@ class ShardedReuseExecutor:
                  b_placement: str = "replicated",
                  validate: str | None = "off"):
         if b_placement not in B_PLACEMENTS:
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"unknown b_placement {b_placement!r}; expected one of "
                 f"{B_PLACEMENTS}")
         if mesh.shape[axis] != plan.num_shards:
-            raise ValueError(
+            raise PlanMismatchError(
                 f"plan has {plan.num_shards} shards but mesh axis "
                 f"{axis!r} has {mesh.shape[axis]} devices")
         self.plan = plan
@@ -305,7 +306,7 @@ class ShardedReuseExecutor:
         a_axis = 0 if a_values.ndim == 2 else None
         b_axis = 0 if b_values.ndim == 2 else None
         if a_axis is None and b_axis is None:
-            raise ValueError(
+            raise SpgemmConfigError(
                 "apply_batched needs at least one stacked (batch, nnz) "
                 "operand; use apply() for a single replay")
         if self.validate_mode != "off":
@@ -320,7 +321,7 @@ class ShardedReuseExecutor:
         """Wrap one replay's (S, nnz_cap) values in the plan's C structure."""
         want = (self.num_shards, self.nnz_cap)
         if tuple(values.shape) != want:
-            raise ValueError(
+            raise PlanMismatchError(
                 f"expected ONE replay's (S, nnz_cap)={want} values, got "
                 f"{tuple(values.shape)}; apply_batched output carries a "
                 f"leading batch axis — index a batch element first")
@@ -342,7 +343,7 @@ class ShardedReuseExecutor:
         """
         want = (self.num_shards, self.nnz_cap)
         if tuple(values.shape) != want:
-            raise ValueError(
+            raise PlanMismatchError(
                 f"merge_values takes one replay's (S, nnz_cap)={want} "
                 f"values, got {tuple(values.shape)}; index a batch element "
                 f"of apply_batched output first")

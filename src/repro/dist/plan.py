@@ -137,7 +137,8 @@ def build_sharded_plan(a: CSR, b: CSR, mesh, *, axis: str = "data",
     first so both paths hash and bucket identically).
     """
     if b_placement not in B_PLACEMENTS:
-        raise ValueError(
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
             f"unknown b_placement {b_placement!r}; expected one of {B_PLACEMENTS}")
     policy = DEFAULT_PAD_POLICY if pad_policy is None else pad_policy
     num = mesh.shape[axis]

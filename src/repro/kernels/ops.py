@@ -67,15 +67,17 @@ def resolve_numeric_kernel(a: CSR, b: CSR, kernel: str = "auto",
     """
     from repro.core import autotune  # lazy: avoid kernels<->core cycle
 
+    from repro.runtime.validate import SpgemmConfigError  # cycle-free
+
     if kernel not in NUMERIC_KERNELS:
-        raise ValueError(
+        raise SpgemmConfigError(
             f"unknown kernel {kernel!r}; expected one of {NUMERIC_KERNELS}")
     f32_ok = f32_accumulation_ok(a.values.dtype, b.values.dtype)
     if kernel != "auto":
         # an explicit Pallas kernel the dtypes cannot run correctly must fail
         # loudly — silently accumulating f64/int in f32 would corrupt results
         if kernel != "xla" and not f32_ok:
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"kernel={kernel!r} accumulates in f32 and cannot take "
                 f"{a.values.dtype}/{b.values.dtype} operands exactly; "
                 f"use kernel='xla' (what 'auto' resolves to for them)")
@@ -137,16 +139,17 @@ def numeric_values(a: CSR, b: CSR, c_idx: jax.Array, c_nnz: jax.Array, *,
     """
     from repro.core import autotune  # lazy: avoid kernels<->core cycle
     from repro.runtime import faults  # lazy: keep kernels import-light
-    from repro.runtime.validate import KernelFallbackError, SpgemmError
+    from repro.runtime.validate import (KernelFallbackError,
+                                        SpgemmConfigError, SpgemmError)
 
     autotune.validate_tune(tune)
     if tune == "measure" and kernel != "auto":
-        raise ValueError(
+        raise SpgemmConfigError(
             f"tune='measure' requires kernel='auto' (got kernel={kernel!r}):"
             f" measure mode picks the kernel empirically, an explicit pin "
             f"contradicts it")
     if on_kernel_failure not in ("fallback", "raise"):
-        raise ValueError(
+        raise SpgemmConfigError(
             f"on_kernel_failure must be 'fallback' or 'raise', got "
             f"{on_kernel_failure!r}")
     ea = csr_to_ell(a)

@@ -182,7 +182,9 @@ def spgemm_lp(a_idx, a_val, a_nnz, b_idx, b_val, b_nnz, c_idx, c_nnz, *,
     if l1_size is None:
         l1_size = default_l1_size(r_c)
     if l1_size & (l1_size - 1) or l1_size < 2:
-        raise ValueError(f"l1_size must be a power of two >= 2; got {l1_size}")
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
+            f"l1_size must be a power of two >= 2; got {l1_size}")
     s2 = default_l1_size(r_c)  # L2 holds every possible spill (MAXRF)
     out_dtype = jnp.result_type(a_val, b_val)
 

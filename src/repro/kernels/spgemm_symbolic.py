@@ -54,7 +54,9 @@ def spgemm_symbolic(a_idx: jax.Array, a_nnz: jax.Array, b_bitmask: jax.Array,
     m, r_a = a_idx.shape
     n, k32 = b_bitmask.shape
     if k32 % 128:
-        raise ValueError(f"k32={k32} must be lane-aligned (multiple of 128)")
+        from repro.runtime.validate import SpgemmInputError  # cycle-free
+        raise SpgemmInputError(
+            f"k32={k32} must be lane-aligned (multiple of 128)")
 
     grid = (m, r_a)
     out = pl.pallas_call(

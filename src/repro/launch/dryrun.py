@@ -1,27 +1,40 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
 
-MUST be run as a module entry point (python -m repro.launch.dryrun) so the
-XLA flag above executes before any jax import in the process.
+Run as a module entry point (``python -m repro.launch.dryrun``): the
+``__main__`` block calls :func:`force_host_devices` before ``main()`` so the
+XLA host-device flag is set before the first backend touch. Importing this
+module never reconfigures XLA — library callers who want the fake-device
+mesh must call :func:`force_host_devices` themselves, explicitly, before
+any jax device work.
 
 Per cell: prints memory_analysis() (proves it fits) and cost_analysis()
 (FLOPs/bytes for the roofline), extracts collective bytes from the compiled
 HLO, and appends a JSON record consumed by EXPERIMENTS.md tooling.
 """
-import argparse  # noqa: E402
-import json  # noqa: E402
-import time  # noqa: E402
-import traceback  # noqa: E402
+import argparse
+import json
+import os
+import time
+import traceback
 
-import jax  # noqa: E402
+import jax
 
-from repro.compat import use_mesh  # noqa: E402
-from repro.configs import SHAPES, all_cells, get_config, skip_reason  # noqa: E402
-from repro.launch.cells import build_cell  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.launch.roofline import analyze  # noqa: E402
+from repro.compat import use_mesh
+from repro.configs import SHAPES, all_cells, get_config, skip_reason
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+
+
+def force_host_devices(n: int = 512) -> None:
+    """Make the CPU platform expose ``n`` fake devices (mesh dry-runs).
+
+    Pure env *write* (no read, no device query): appends the
+    ``--xla_force_host_platform_device_count`` flag so it only takes effect
+    if XLA has not initialized yet — call it first thing in an entrypoint,
+    before any jax device work.
+    """
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
 
 
 def run_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
@@ -110,6 +123,10 @@ def main():
                     rec = run_cell(arch, shape, mesh, smoke=args.smoke,
                                    hlo_dir=args.hlo_dir)
                     n_ok += 1
+                # a failing cell is recorded as a "fail" JSONL row + printed
+                # traceback, and flips the exit code at the end — survey
+                # semantics: compile every cell, report all failures at once
+                # repro: allow[jit-boundary,taxonomy] survey loop records and exits nonzero
                 except Exception as e:  # noqa: BLE001
                     traceback.print_exc()
                     rec = {
@@ -126,4 +143,5 @@ def main():
 
 
 if __name__ == "__main__":
+    force_host_devices()
     main()

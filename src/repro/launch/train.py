@@ -26,6 +26,7 @@ from repro.configs import get_config
 from repro.data import SyntheticLMDataset, make_labels
 from repro.models import init_params
 from repro.models.sharding import NO_SHARDING
+from repro.runtime.validate import TrainingDivergedError
 from repro.runtime.watchdog import StepWatchdog
 from repro.train import AdamWConfig, adamw_init, make_train_step
 
@@ -82,7 +83,8 @@ def main():
             t_last = time.time()
             print(f"step {step + 1}: loss={loss:.4f}  {dt * 1e3:.0f} ms/step")
             if not np.isfinite(loss):
-                raise RuntimeError("loss diverged")
+                raise TrainingDivergedError(
+                    f"loss diverged at step {step + 1}: {loss!r}")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save(args.ckpt_dir, step + 1, (params, opt_state),
                  extra={"arch": args.arch})

@@ -32,6 +32,7 @@ from repro.models.layers import (
     rms_norm,
 )
 from repro.models.sharding import NO_SHARDING, ShardingRules
+from repro.runtime.validate import SpgemmConfigError
 
 COMPUTE_DTYPE = jnp.bfloat16
 MAX_ENCODER_POS = 32_768  # learned positions for encoder-only archs
@@ -53,7 +54,7 @@ def layer_template(cfg: ModelConfig, kind: str) -> dict:
         return {"rec": rglru_mod.rglru_params_template(cfg), "ffn": ffn_params_template(cfg)}
     if kind == "ssm":
         return {"ssm": ssm_mod.ssm_params_template(cfg)}
-    raise ValueError(kind)
+    raise SpgemmConfigError(f"unknown block kind {kind!r}")
 
 
 def model_template(cfg: ModelConfig) -> dict:
@@ -187,7 +188,7 @@ def _kind_cache_template(cfg: ModelConfig, kind: str, batch: int, max_len: int,
                 (batch, cfg.conv_width - 1, 2 * cfg.ssm_state), dtype
             ),
         )
-    raise ValueError(kind)
+    raise SpgemmConfigError(f"unknown block kind {kind!r}")
 
 
 def cache_template(cfg: ModelConfig, batch: int, max_len: int,
@@ -243,7 +244,7 @@ def cache_shardings(cfg: ModelConfig, rules: ShardingRules, batch: int,
                 conv_x=P(*lead, dp, None, rules._tp_if(d_in)),
                 conv_bc=P(*lead, dp, None, None),
             )
-        raise ValueError(kind)
+        raise SpgemmConfigError(f"unknown block kind {kind!r}")
 
     return {
         "blocks": [kind_spec(kind, True) for kind in cfg.pattern],
@@ -289,7 +290,7 @@ def apply_layer(kind: str, p, x, cfg: ModelConfig, rules: ShardingRules, *,
         )
         x = rules.residual(x + delta)
         return x, new_c
-    raise ValueError(kind)
+    raise SpgemmConfigError(f"unknown block kind {kind!r}")
 
 
 # --------------------------------------------------------------------------

@@ -132,7 +132,8 @@ class ShardingRules:
             return P(self._tp_if(shape[0]), None, None)
         if role == "norm":
             return P(*([None] * len(shape)))
-        raise ValueError(role)
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(f"unknown param role {role!r}")
 
     # ---- activation constraints ----------------------------------------
     def residual(self, x):

@@ -32,7 +32,9 @@ class FlightRecorder:
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY):
         if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
+            from repro.runtime.validate import SpgemmConfigError  # cycle-free
+            raise SpgemmConfigError(
+                f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._ring: deque[dict] = deque(maxlen=capacity)
         self._seq = 0

@@ -54,21 +54,41 @@ TRACE_ENV_VAR = "REPRO_TRACE"
 # dropped events (counted), never to unbounded host memory.
 MAX_EVENTS = 100_000
 
+# The span taxonomy. Every ``span("...")`` literal in the stack must come
+# from this set — dashboards, the flight recorder, the latency histograms
+# and the ROADMAP phase table all key on these exact strings, so a
+# free-typed name silently drops out of the phase-latency story. Enforced
+# statically by ``python -m repro.analysis`` (rule ``span``); extend the
+# set (and the ROADMAP table) in the same commit that adds a new phase.
+SPAN_NAMES = frozenset({
+    "spgemm.prepare",     # operand normalization + structure hash
+    "spgemm.symbolic",    # symbolic phase: sizes + plan expansion
+    "plan.build",         # plan assembly (sort, seg ids, slot maps)
+    "numeric.dispatch",   # executor-level replay dispatch
+    "numeric.kernel",     # one numeric kernel execution
+    "dist.replay",        # sharded replay under shard_map
+    "serve.admit",        # serving-tier admission decision
+    "serve.dispatch",     # serving-tier batch dispatch
+})
+
 
 def resolve_trace_mode(mode: str | bool | None) -> str:
     """Normalize a ``trace=`` argument to a concrete mode.
 
     ``None`` defers to ``$REPRO_TRACE`` (else "off"); booleans map to
-    "on"/"off"; anything outside ``TRACE_MODES`` is a loud ``ValueError``
-    (a typo'd mode silently tracing nothing would defeat the layer).
+    "on"/"off"; anything outside ``TRACE_MODES`` is a loud
+    ``SpgemmConfigError`` (a typo'd mode silently tracing nothing would
+    defeat the layer).
     """
+    from repro.runtime.validate import SpgemmConfigError  # cycle-free
+
     if mode is None:
         raw = os.environ.get(TRACE_ENV_VAR, "off") or "off"
         lowered = raw.strip().lower()
         aliases = {"": "off", "0": "off", "false": "off", "off": "off",
                    "1": "on", "true": "on", "on": "on", "xprof": "xprof"}
         if lowered not in aliases:
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"unknown ${TRACE_ENV_VAR} value {raw!r}; expected one of "
                 f"{TRACE_MODES} (or 0/1/true/false)")
         return aliases[lowered]
@@ -77,7 +97,7 @@ def resolve_trace_mode(mode: str | bool | None) -> str:
     if mode is False:
         return "off"
     if mode not in TRACE_MODES:
-        raise ValueError(
+        raise SpgemmConfigError(
             f"unknown trace mode {mode!r}; expected one of {TRACE_MODES} "
             f"(or True/False/None)")
     return mode
@@ -174,6 +194,9 @@ class _Span:
 
                 self._annotation = TraceAnnotation(self.name)
                 self._annotation.__enter__()
+            # observability must never fail the observed call: a missing or
+            # broken profiler hook degrades to "no annotation", by design
+            # repro: allow[taxonomy] intentional silent degradation
             except Exception:
                 self._annotation = None  # profiling must never fail the call
         _STATE.depth += 1

@@ -11,8 +11,10 @@ from repro.runtime.retry import RetryExhaustedError, backoff_schedule, retry_cal
 from repro.runtime.validate import (VALIDATE_MODES, AdmissionRejected,
                                     CapacityOverflowError, DeadlineExceeded,
                                     KernelFallbackError, PlanGuard,
-                                    PlanMismatchError, SpgemmError,
-                                    SpgemmInputError, check_csr, resolve_mode)
+                                    PlanMismatchError, SpgemmConfigError,
+                                    SpgemmError, SpgemmInputError,
+                                    TrainingDivergedError, check_csr,
+                                    resolve_mode)
 from repro.runtime.watchdog import Heartbeat, StepWatchdog, StragglerDetected
 
 __all__ = [
@@ -21,6 +23,8 @@ __all__ = [
     "StragglerDetected",
     "SpgemmError",
     "SpgemmInputError",
+    "SpgemmConfigError",
+    "TrainingDivergedError",
     "PlanMismatchError",
     "CapacityOverflowError",
     "KernelFallbackError",

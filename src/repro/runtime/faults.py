@@ -221,6 +221,8 @@ def inject_csr(name: str, csr, seed: int = 0):
     """Apply registered data fault ``name`` to ``csr`` deterministically."""
     spec = FAULTS[name]
     if spec.kind != "data":
-        raise ValueError(f"fault {name!r} is kind={spec.kind!r}, not a data "
-                         "fault — arm its failpoint instead")
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(
+            f"fault {name!r} is kind={spec.kind!r}, not a data "
+            "fault — arm its failpoint instead")
     return spec.fn(csr, np.random.default_rng(seed))

@@ -79,7 +79,8 @@ def retry_call(fn: Callable, *args,
     from repro.core.telemetry import RETRY_COUNTS  # lazy: telemetry is core
 
     if retries < 0:
-        raise ValueError(f"retries must be >= 0, got {retries}")
+        from repro.runtime.validate import SpgemmConfigError  # cycle-free
+        raise SpgemmConfigError(f"retries must be >= 0, got {retries}")
     if label is None:
         label = getattr(fn, "__name__", "anon")
     delays = backoff_schedule(retries, base_delay_s=base_delay_s,

@@ -96,17 +96,31 @@ class DeadlineExceeded(SpgemmError, TimeoutError):
     generic timeout handling at call sites composes."""
 
 
+class SpgemmConfigError(SpgemmError, ValueError):
+    """A caller passed an invalid knob, mode, name, or option combination
+    (unknown kernel/policy/placement strings, malformed config fields,
+    out-of-range parameters). The catch-all member for misuse of an API
+    surface, as opposed to bad *data* (``SpgemmInputError``) or bad
+    *state* (``PlanMismatchError``)."""
+
+
+class TrainingDivergedError(SpgemmError, RuntimeError):
+    """The training loop's loss went non-finite: the typed, intentional
+    abort of ``launch/train.py`` (distinct from ``KernelFallbackError``,
+    which is the ladder giving up on a single kernel call)."""
+
+
 def resolve_mode(mode: str | None) -> str:
     """Normalize a ``validate=`` argument to a concrete mode.
 
     ``None`` defers to ``$REPRO_VALIDATE`` (else "off"); anything outside
-    ``VALIDATE_MODES`` is a loud ``ValueError`` — a typo'd mode silently
-    validating nothing would defeat the whole layer.
+    ``VALIDATE_MODES`` is a loud ``SpgemmConfigError`` — a typo'd mode
+    silently validating nothing would defeat the whole layer.
     """
     if mode is None:
         mode = os.environ.get(VALIDATE_ENV_VAR, "off") or "off"
     if mode not in VALIDATE_MODES:
-        raise ValueError(
+        raise SpgemmConfigError(
             f"unknown validate mode {mode!r}; expected one of "
             f"{VALIDATE_MODES}")
     return mode

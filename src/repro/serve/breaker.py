@@ -35,6 +35,8 @@ import time
 from collections import deque
 from typing import Callable
 
+from repro.runtime.validate import SpgemmConfigError
+
 CLOSED = "closed"
 OPEN = "open"
 HALF_OPEN = "half_open"
@@ -52,10 +54,10 @@ class CircuitBreaker:
                  window_s: float = 30.0, cooldown_s: float = 5.0,
                  clock: Callable[[], float] = time.monotonic):
         if failure_threshold < 1:
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"failure_threshold must be >= 1, got {failure_threshold}")
         if window_s <= 0 or cooldown_s < 0:
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"window_s must be > 0 and cooldown_s >= 0, got "
                 f"window_s={window_s}, cooldown_s={cooldown_s}")
         self.name = name

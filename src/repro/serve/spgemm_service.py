@@ -70,6 +70,7 @@ from repro.obs import recorder as obs_recorder
 from repro.obs import trace as obs_trace
 from repro.runtime.retry import retry_call
 from repro.runtime.validate import (AdmissionRejected, DeadlineExceeded,
+                                    SpgemmConfigError,
                                     KernelFallbackError, SpgemmError,
                                     check_csr, resolve_mode)
 from repro.runtime.watchdog import StepWatchdog
@@ -174,10 +175,10 @@ class SparseService:
                  sleep: Callable[[float], None] = time.sleep,
                  traffic_log: TrafficLog | None = None):
         if backend not in BACKENDS:
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"unknown backend {backend!r}; expected one of {BACKENDS}")
         if max_queue < 1 or max_batch < 1:
-            raise ValueError(
+            raise SpgemmConfigError(
                 f"max_queue and max_batch must be >= 1, got "
                 f"max_queue={max_queue}, max_batch={max_batch}")
         self.fast_backend = "xla" if backend == "auto" else backend

@@ -82,7 +82,10 @@ class CSR:
         nnz = len(rows)
         cap = nnz_cap if nnz_cap is not None else max(nnz, 1)
         if cap < nnz:
-            raise ValueError(f"nnz_cap={cap} < nnz={nnz}")
+            from repro.runtime.validate import CapacityOverflowError  # cycle-free
+            raise CapacityOverflowError(
+                f"nnz_cap={cap} < nnz={nnz}: the requested capacity cannot "
+                f"hold the dense input's live entries")
         indptr = np.zeros(m + 1, np.int32)
         np.add.at(indptr[1:], rows, 1)
         indptr = np.cumsum(indptr).astype(np.int32)

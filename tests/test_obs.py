@@ -24,7 +24,7 @@ from repro.core import telemetry
 from repro.core.executor import ReuseExecutor
 from repro.core.plan_cache import PlanCache
 from repro.core.spgemm import spgemm
-from repro.obs.trace import _NOOP
+from repro.obs.trace import _NOOP, SPAN_NAMES
 from repro.runtime import faults
 from repro.runtime.watchdog import Heartbeat
 from repro.sparse import random_csr
@@ -166,7 +166,10 @@ def test_spgemm_trace_kwarg(ab):
     cache = PlanCache()  # fresh: the traced call must pay the plan build
     traced = spgemm(a, b, method="sparse", plan_cache=cache, trace=True)
     names = {e["name"] for e in obs.events()}
+    # the three single-device phases fired, and every recorded span name
+    # comes from the exported taxonomy (no free-typed strings)
     assert {"spgemm.prepare", "plan.build", "numeric.dispatch"} <= names
+    assert names <= SPAN_NAMES, names - SPAN_NAMES
     assert not obs.enabled()  # trace=True scoped to the one call
     n_events = len(obs.events())
     res = spgemm(a, b, method="sparse", plan_cache=cache)  # ambient: off
@@ -354,7 +357,9 @@ def test_service_chaos_traced_end_to_end(tmp_path):
         # end-to-end propagation, not just a stamp at the door
         assert "serve.admit" in by_tid[tid], tid
         assert "numeric.dispatch" in by_tid[tid], tid
-    assert "plan.build" in set().union(*by_tid.values())
+    all_names = set().union(*by_tid.values())
+    assert "plan.build" in all_names
+    assert all_names <= SPAN_NAMES, all_names - SPAN_NAMES  # taxonomy-closed
 
     # -- per-phase histograms have real, nonzero latency distributions -----
     reg = obs.default_registry()

@@ -1,0 +1,74 @@
+"""Regression tests for the PR-10 typed-taxonomy conversions.
+
+Pre-taxonomy modules raised bare ``ValueError``/``RuntimeError``; the
+analysis pass (rule ``taxonomy``) forced them onto the typed classes. These
+tests pin both halves of the contract: the *typed* class is raised, and it
+still subclasses the original builtin so no pre-existing caller breaks.
+"""
+import numpy as np
+import pytest
+
+from repro.core.executor import ReuseExecutor
+from repro.core.meta import round_capacity
+from repro.core.spgemm import spgemm
+from repro.dist.plan import build_sharded_plan
+from repro.runtime.validate import (CapacityOverflowError, SpgemmConfigError,
+                                    SpgemmError, TrainingDivergedError,
+                                    resolve_mode)
+from repro.serve.breaker import CircuitBreaker
+from repro.sparse import CSR, random_csr
+
+
+def test_new_classes_slot_into_the_taxonomy():
+    assert issubclass(SpgemmConfigError, SpgemmError)
+    assert issubclass(SpgemmConfigError, ValueError)
+    assert issubclass(TrainingDivergedError, SpgemmError)
+    assert issubclass(TrainingDivergedError, RuntimeError)
+
+
+def test_from_dense_overflow_is_typed():
+    dense = np.eye(4, dtype=np.float32)
+    with pytest.raises(CapacityOverflowError, match="nnz_cap=2 < nnz=4"):
+        CSR.from_dense(dense, nnz_cap=2)
+    # legacy callers that caught ValueError still work
+    with pytest.raises(ValueError):
+        CSR.from_dense(dense, nnz_cap=2)
+
+
+def test_build_sharded_plan_bad_placement_is_typed():
+    a = random_csr(8, 8, 2.0, seed=0)
+    b = random_csr(8, 8, 2.0, seed=1)
+    with pytest.raises(SpgemmConfigError, match="b_placement"):
+        build_sharded_plan(a, b, mesh=None, b_placement="broadcast")
+
+
+def test_resolve_mode_typo_is_typed():
+    with pytest.raises(SpgemmConfigError, match="unknown validate mode"):
+        resolve_mode("hots")
+    with pytest.raises(ValueError):  # legacy catch still works
+        resolve_mode("hots")
+
+
+def test_spgemm_bad_method_is_typed():
+    a = random_csr(8, 8, 2.0, seed=0)
+    b = random_csr(8, 8, 2.0, seed=1)
+    with pytest.raises(SpgemmConfigError, match="unknown method"):
+        spgemm(a, b, method="dense_acc")
+
+
+def test_executor_bad_backend_is_typed():
+    a = random_csr(8, 8, 2.0, seed=0)
+    b = random_csr(8, 8, 2.0, seed=1)
+    res = spgemm(a, b, method="sparse")
+    with pytest.raises(SpgemmConfigError, match="unknown backend"):
+        ReuseExecutor(res.plan, backend="cuda")
+
+
+def test_round_capacity_bad_policy_is_typed():
+    with pytest.raises(SpgemmConfigError, match="unknown pad_policy"):
+        round_capacity(7, "exact-ish")
+
+
+def test_breaker_bad_threshold_is_typed():
+    with pytest.raises(SpgemmConfigError, match="failure_threshold"):
+        CircuitBreaker("b", failure_threshold=0)

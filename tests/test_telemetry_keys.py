@@ -1,10 +1,13 @@
 """One test per documented telemetry key family (core/telemetry.py).
 
-The key conventions in telemetry.py's comments are load-bearing: dashboards,
-the Prometheus exporter and the serving tier's stats() all parse them. Each
-test here drives the real code path that bumps a family and asserts the
-*exact* key strings, so renaming a key without updating the docs (or vice
-versa) fails loudly.
+The key conventions in ``telemetry.KEY_FAMILIES`` are load-bearing:
+dashboards, the Prometheus exporter and the serving tier's stats() all
+parse them. Each test here drives the real code path that bumps a family
+and asserts the *exact* key strings — derived from the machine-readable
+grammars where the family templates them — so renaming a key without
+updating the registry (or vice versa) fails loudly. The static half of
+this contract is ``python -m repro.analysis`` (rule ``telemetry-key``),
+which checks every mutation site against the same KEY_FAMILIES dict.
 """
 import jax.numpy as jnp
 import pytest
@@ -121,6 +124,9 @@ def test_retry_keys_attempt_retry_giveup():
     assert telemetry.RETRY_COUNTS["keytest:attempt"] == 5
     assert telemetry.RETRY_COUNTS["keytest:retry"] == 3
     assert telemetry.RETRY_COUNTS["keytest:giveup"] == 1
+    # the family grammar covers exactly the keys the mechanism produced
+    assert sorted(telemetry.RETRY_COUNTS) == sorted(
+        t.replace("{}", "keytest") for t in telemetry.KEY_FAMILIES["retry"])
 
 
 # --------------------------------------------------------------------------
@@ -152,7 +158,38 @@ def test_breaker_keys_all_five_transitions():
     br.record_success()                       # probe succeeded -> close
     assert telemetry.BREAKER_COUNTS["keybrk:close"] == 1
 
-    assert sorted(telemetry.BREAKER_COUNTS) == [
-        "keybrk:close", "keybrk:half_open", "keybrk:open",
-        "keybrk:reopen", "keybrk:short_circuit"]
+    # all five transition keys, derived from the documented grammar rather
+    # than re-listed inline — KEY_FAMILIES is the single source of truth
+    assert sorted(telemetry.BREAKER_COUNTS) == sorted(
+        t.replace("{}", "keybrk") for t in telemetry.KEY_FAMILIES["breaker"])
     assert telemetry.BREAKER_COUNTS["keybrk:half_open"] == 2
+
+
+# --------------------------------------------------------------------------
+# the grammar registry itself
+# --------------------------------------------------------------------------
+
+
+def test_key_families_cover_all_registered_counters():
+    assert set(telemetry.KEY_FAMILIES) == set(telemetry.ALL_COUNTERS)
+
+
+def test_every_live_key_matches_its_family_grammar(ab):
+    """After driving the fault/retry flows above, every key in every
+    registered counter must fit its family's documented templates."""
+    a, b = ab
+    ex = ReuseExecutor.from_matrices(a, b, backend="pallas")
+    with faults.failpoint("kernel:pallas"):
+        ex.apply(a.values, b.values)
+    retry_call(lambda: "ok", retries=0, sleep=lambda _: None, label="g")
+    for family, counter in telemetry.ALL_COUNTERS.items():
+        for key in counter:
+            assert telemetry.key_matches_family(family, key), (family, key)
+
+
+def test_key_matches_family_rejects_drift():
+    assert telemetry.key_matches_family("fallback", "fault:pallas->xla")
+    assert telemetry.key_matches_family("fallback", "nan_guard:rerun")
+    assert not telemetry.key_matches_family("fallback", "nan_guard:re-run")
+    assert not telemetry.key_matches_family("breaker", "b:exploded")
+    assert not telemetry.key_matches_family("nope", "anything")
